@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks.
+
+Wall-time on this host measures the *simulation* (CPU, interpret-mode
+Pallas), so two complementary numbers are reported per kernel:
+  * CPU wall-time of the pure-jnp pipeline (simulation cost, paper §6
+    'simulations ... significantly prolong runtime'),
+  * projected TPU v5e time from the kernel's bytes/FLOPs roofline
+    (HBM 819 GB/s, bf16 197 / int8 394 TFLOP/s).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize
+from repro.core.fp4_gemm import fp4_matmul
+from repro.core.policy import FP4_PAPER, BF16
+
+HBM = 819e9
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run(csv_rows: list):
+    print("\n# Kernel benchmarks (CPU simulation walltime + v5e projection)")
+    M, K, N = 2048, 4096, 4096
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.bfloat16)
+
+    t_bf16 = _time(jax.jit(lambda a, w: a @ w), a, w)
+    pol = FP4_PAPER.replace(occ=False)
+    t_fp4 = _time(jax.jit(lambda a, w: fp4_matmul(a, w, pol)), a, w)
+    pol_occ = FP4_PAPER.replace(occ_threshold="sample")
+    from repro.core.linear import fp4_linear
+    t_occ = _time(jax.jit(lambda a, w: fp4_linear(a, w, policy=pol_occ)), a, w)
+    print(f"gemm {M}x{K}x{N}: bf16 {t_bf16:.0f}us | fp4-sim {t_fp4:.0f}us "
+          f"({t_fp4/t_bf16:.1f}x sim overhead) | +occ {t_occ:.0f}us")
+    csv_rows.append(("kernel/gemm_bf16_cpu", t_bf16, "us"))
+    csv_rows.append(("kernel/gemm_fp4sim_cpu", t_fp4,
+                     f"{t_fp4/t_bf16:.2f}x_overhead"))
+
+    # v5e projections
+    flops = 2.0 * M * K * N
+    bytes_bf16 = 2.0 * (M * K + K * N + M * N)
+    bytes_fp4 = 0.5 * (M * K + K * N) + 2.0 * M * N  # 4-bit operands
+    t_proj_bf16 = max(flops / PEAK_BF16, bytes_bf16 / HBM) * 1e6
+    t_proj_fp4 = max(flops / PEAK_INT8, bytes_fp4 / HBM) * 1e6
+    print(f"v5e projection: bf16 {t_proj_bf16:.1f}us, fp4-int8 "
+          f"{t_proj_fp4:.1f}us ({t_proj_bf16/t_proj_fp4:.2f}x speedup)")
+    csv_rows.append(("kernel/gemm_v5e_bf16_proj", t_proj_bf16, "us"))
+    csv_rows.append(("kernel/gemm_v5e_fp4_proj", t_proj_fp4,
+                     f"{t_proj_bf16/t_proj_fp4:.2f}x"))
+
+    # quantize kernel: bytes-bound
+    q_bytes = 2.0 * M * K + 0.5 * M * K + 4.0 * M
+    t_q = q_bytes / HBM * 1e6
+    print(f"fp4_quant v5e projection ({M}x{K}): {t_q:.1f}us "
+          f"(pure bandwidth, {q_bytes/1e6:.1f} MB)")
+    csv_rows.append(("kernel/quant_v5e_proj", t_q, "bandwidth_bound"))
+
+    # flash attention: HBM traffic vs materialized scores
+    B, S, H, D = 8, 4096, 16, 128
+    naive_bytes = 4.0 * B * H * S * S * 2  # scores + probs, bf16
+    flash_bytes = 2.0 * B * S * H * D * 4  # q,k,v,o once
+    print(f"flash-attn traffic {B}x{S}x{H}x{D}: naive {naive_bytes/1e9:.1f} GB"
+          f" -> flash {flash_bytes/1e9:.2f} GB "
+          f"({naive_bytes/flash_bytes:.0f}x reduction)")
+    csv_rows.append(("kernel/flash_traffic_reduction", 0.0,
+                     f"{naive_bytes/flash_bytes:.1f}x"))

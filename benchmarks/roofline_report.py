@@ -1,0 +1,72 @@
+"""Aggregate dry-run artifacts into the §Roofline table (EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLS = ("arch", "shape", "mesh", "compute_fp4_s", "memory_s", "collective_s",
+        "dominant", "useful_ratio", "peak_gb", "mfu_bound")
+
+
+def load_artifacts(out_dir: str = "artifacts/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "skipped": True,
+                         "reason": r.get("reason", "")})
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "policy": r.get("policy", "fp4"), "skipped": False,
+            "compute_bf16_s": r["roofline"]["compute_bf16_s"],
+            "compute_fp4_s": r["roofline"]["compute_fp4_s"],
+            "memory_s": r["roofline"]["memory_s"],
+            "collective_s": r["roofline"]["collective_s"],
+            "dominant": r["roofline"]["dominant"],
+            "step_time_s": r["roofline"]["step_time_s"],
+            "useful_ratio": r["flops"]["useful_ratio"],
+            "model_flops_dev": r["flops"]["model_per_dev"],
+            "peak_gb": r["memory_analysis"]["peak_estimate_gb"],
+            "mfu_bound": r["mfu_bound"],
+            "wire_gb": r["collectives"]["total_wire_bytes"] / 1e9,
+            "compile_s": r["compile_s"],
+        })
+    return rows
+
+
+def render_table(rows) -> str:
+    lines = ["| arch | shape | mesh | compute(s) | memory(s) | coll(s) | "
+             "dominant | useful | peak GB | MFU bound |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | skipped | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_fp4_s']:.3g} | {r['memory_s']:.3g} | "
+            f"{r['collective_s']:.3g} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} | {r['peak_gb']:.1f} | "
+            f"{r['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def run(csv_rows: list, out_dir: str = "artifacts/dryrun"):
+    rows = load_artifacts(out_dir)
+    done = [r for r in rows if not r.get("skipped")]
+    skipped = [r for r in rows if r.get("skipped")]
+    print(f"\n# Roofline report: {len(done)} cells analysed, "
+          f"{len(skipped)} skipped")
+    if not done:
+        print("(no artifacts yet -- run launch/sweep.py)")
+        return
+    print(render_table(rows))
+    for r in done:
+        csv_rows.append((f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}",
+                         r["step_time_s"] * 1e6,
+                         f"{r['dominant']}:{r['mfu_bound']:.3f}"))

@@ -1,0 +1,53 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV at the end.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer convergence steps (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    args = ap.parse_args()
+
+    from benchmarks import (convergence, kernel_bench, quant_fidelity,
+                            roofline_report, speedup_theory)
+
+    csv_rows: list[tuple[str, float, str]] = []
+    benches = {
+        "quant_fidelity": lambda: quant_fidelity.run(csv_rows),
+        "speedup_theory": lambda: speedup_theory.run(csv_rows),
+        "kernel_bench": lambda: kernel_bench.run(csv_rows),
+        "convergence": lambda: convergence.run(
+            csv_rows, steps=40 if args.fast else 120,
+            ablations=not args.fast),
+        "roofline_report": lambda: roofline_report.run(csv_rows),
+    }
+    failed = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"\nFAILED benchmarks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Appendix B: theoretical speedup + overhead accounting, reproduced
+symbolically and evaluated at the paper's reference point (h=4096, s=2048,
+alpha=0.99), plus the TPU-adaptation column (int8 MXU = 2x GeMM throughput
+instead of Blackwell's 4x).
+"""
+from __future__ import annotations
+
+import time
+
+
+def component_table(h: int, s: int):
+    """FLOP breakdown per Transformer layer (paper Table 5), per (b=1)."""
+    rows = [
+        ("input_layernorm", 4 * s * h, 1.0),
+        ("qkv_projection", 6 * s * h * h, 4.0),
+        ("attention_scores", 4 * s * s * h, 1.0),
+        ("softmax", s * s * h, 1.0),
+        ("output_projection", 2 * s * h * h, 4.0),
+        ("post_attn_layernorm", 4 * s * h, 1.0),
+        ("ffn_up", 8 * s * h * h, 4.0),
+        ("gelu", 28 * s * h, 1.0),
+        ("ffn_down", 8 * s * h * h, 4.0),
+    ]
+    return rows
+
+
+def speedups(h: int = 4096, s: int = 2048, alpha: float = 0.99,
+             gemm_speedup: float = 4.0):
+    """Returns (ideal, adjusted) speedup per paper App. B formulas,
+    parameterized by the hardware GeMM speedup (4x B200 FP4-vs-FP32-ish,
+    2x TPU int8-vs-bf16)."""
+    total_fp32 = 24 * h + 5 * s + 36
+    gemm_term = 24 * h / gemm_speedup
+    ideal = total_fp32 / (gemm_term + 5 * s + 36)
+    # DGE: +8 flops/elem over 12*b*s*h gemm inputs -> 96bsh per iter (/3 fwd)
+    # OCC: 2(1-alpha) * 12bsh^2 extra dense-equivalent flops
+    adjusted = total_fp32 / (gemm_term + 24 * (1 - alpha) * h + 5 * s +
+                             36 + 32)
+    return ideal, adjusted
+
+
+def run(csv_rows: list):
+    t0 = time.time()
+    print("\n# Appendix B: FLOP breakdown (h=4096, s=2048, per layer, b=1)")
+    print(f"{'component':22s} {'FLOPs(FP32)':>14s} {'speedup':>8s}")
+    for name, flops, sp in component_table(4096, 2048):
+        print(f"{name:22s} {flops:14.3e} {sp:8.1f}x")
+
+    ideal_paper, adj_paper = speedups(gemm_speedup=4.0)
+    print(f"\npaper (Blackwell FP4, 4x GeMM): ideal {ideal_paper:.2f}x, "
+          f"DGE+OCC adjusted {adj_paper:.2f}x  (paper reports 3.12 / 2.95)")
+    assert abs(ideal_paper - 3.12) < 0.02
+    # NOTE: evaluating the paper's own App. B formula
+    # (24h+5s+36)/(6h+24(1-a)h+5s+68) at h=4096,s=2048,a=0.99 gives 3.03,
+    # not the 2.95 printed in the paper -- a small arithmetic slip in the
+    # paper; we reproduce the formula, not the typo (EXPERIMENTS.md).
+    assert abs(adj_paper - 3.03) < 0.02
+    ideal_tpu, adj_tpu = speedups(gemm_speedup=2.0)
+    print(f"TPU adaptation (int8 MXU, 2x GeMM): ideal {ideal_tpu:.2f}x, "
+          f"adjusted {adj_tpu:.2f}x")
+    csv_rows.append(("speedup/paper_ideal", 0.0, f"{ideal_paper:.3f}"))
+    csv_rows.append(("speedup/paper_adjusted", 0.0, f"{adj_paper:.3f}"))
+    csv_rows.append(("speedup/tpu_ideal", 0.0, f"{ideal_tpu:.3f}"))
+    csv_rows.append(("speedup/tpu_adjusted",
+                     (time.time() - t0) * 1e6, f"{adj_tpu:.3f}"))
+
+    # overhead shares (paper: DGE 0.1%, OCC 5.6%)
+    h, s, alpha = 4096, 2048, 0.99
+    dge_share = 32 / (6 * h + 5 * s + 36)
+    occ_share = 24 * (1 - alpha) * h / (6 * h + 5 * s + 36)
+    print(f"overheads: DGE {dge_share*100:.2f}% (paper 0.1%), "
+          f"OCC {occ_share*100:.2f}% (paper 5.6%)")
+    csv_rows.append(("speedup/dge_overhead_pct", 0.0, f"{dge_share*100:.3f}"))
+    csv_rows.append(("speedup/occ_overhead_pct", 0.0, f"{occ_share*100:.3f}"))

@@ -1,0 +1,34 @@
+"""Paper Fig. 6 ablations, runnable at CPU scale: DGE (k sweep) and OCC
+(alpha sweep) on a tiny LLaMA with identical data.
+
+    PYTHONPATH=src python examples/ablation_dge_occ.py [--steps 80]
+"""
+import argparse
+
+from repro.core.policy import FP4_PAPER, W4A8, W8A4
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+    from benchmarks.convergence import train_arm, _tail_mean
+
+    print("# DGE k sweep (weight-only W4A8, paper Fig. 6b)")
+    for k in [1.0, 3.0, 5.0, 8.0]:
+        final = _tail_mean(train_arm(W4A8.replace(dge_k=k), args.steps))
+        print(f"k={k:<4} final_loss={final:.4f}")
+
+    print("\n# OCC alpha sweep (activation-only W8A4, paper Fig. 6c)")
+    for alpha in [0.999, 0.99, 0.97]:
+        final = _tail_mean(train_arm(W8A4.replace(occ_alpha=alpha),
+                                     args.steps))
+        print(f"alpha={alpha:<6} final_loss={final:.4f}")
+
+    print("\n# Full recipe")
+    final = _tail_mean(train_arm(FP4_PAPER, args.steps))
+    print(f"W4A4+DGE+OCC final_loss={final:.4f}")
+
+
+if __name__ == "__main__":
+    main()

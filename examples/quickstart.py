@@ -1,0 +1,50 @@
+"""Quickstart: train a tiny LLaMA in FP4 for 30 steps on CPU and watch the
+loss fall; compare against the BF16 baseline on identical data.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.policy import get_policy
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.optim import adam as adam_mod
+
+
+def train(policy_name: str, steps: int = 30):
+    cfg = get_config("llama2-400m", smoke=True).replace(
+        d_model=128, d_ff=256, vocab_size=512, loss_chunk=64)
+    policy = get_policy(policy_name)
+    if policy.occ:
+        policy = policy.replace(occ_threshold="exact")
+    model = build_model(cfg, policy)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    adam_cfg = adam_mod.AdamConfig(weight_decay=0.01)
+    opt = adam_mod.init_state(params, adam_cfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 128, 8, seed=1))
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        grads, _ = adam_mod.clip_by_global_norm(grads, 1.0)
+        params, opt = adam_mod.apply_update(params, grads, opt, 1e-3, adam_cfg)
+        return params, opt, loss
+
+    print(f"--- {policy_name} ---")
+    for s in range(steps):
+        batch = {"tokens": jnp.asarray(data.global_batch(s))}
+        params, opt, loss = step(params, opt, batch)
+        if s % 5 == 0 or s == steps - 1:
+            print(f"step {s:3d}  loss {float(loss):.4f}")
+    return float(loss)
+
+
+if __name__ == "__main__":
+    l_bf16 = train("bf16")
+    l_fp4 = train("fp4")
+    print(f"\nfinal: bf16 {l_bf16:.4f} vs fp4 {l_fp4:.4f} "
+          f"(gap {l_fp4 - l_bf16:+.4f}) -- the paper's claim is that this "
+          f"gap stays small while GeMMs run 2-4x faster on FP4 hardware.")

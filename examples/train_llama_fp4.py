@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-param LLaMA with the full production
+stack -- FP4 policy, mixed-precision Adam, warmup+cosine schedule, atomic
+checkpointing with resume, NaN guards, straggler watchdog.
+
+    PYTHONPATH=src python examples/train_llama_fp4.py \
+        [--steps 300] [--policy fp4] [--ckpt /tmp/fp4_ckpt] [--d-model 512]
+
+~100M params: d=512, L=8, ff=2048, vocab=32000 (tied). On CPU this runs a
+few hundred steps in minutes at seq 256 / batch 8 -- the shape of the real
+pretraining loop, scaled down.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.policy import get_policy
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.optim import adam as adam_mod
+from repro.train import train_step as ts_mod
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--policy", default="fp4")
+    ap.add_argument("--ckpt", default="/tmp/fp4_ckpt")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config("llama2-400m").replace(
+        n_layers=args.layers, d_model=args.d_model, n_heads=8, n_kv_heads=8,
+        d_ff=args.d_model * 4, vocab_size=32000, tie_embeddings=True,
+        loss_chunk=128, remat=False, scan_layers=True)
+    policy = get_policy(args.policy)
+    model = build_model(cfg, policy)
+
+    params, _ = model.init(jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params, policy={args.policy}")
+
+    adam_cfg = adam_mod.AdamConfig()
+    state = {"params": params, "opt": adam_mod.init_state(params, adam_cfg),
+             "step": jnp.zeros((), jnp.int32)}
+    step_fn = jax.jit(ts_mod.make_train_step(
+        model, None, adam_cfg=adam_cfg, total_steps=args.steps,
+        peak_lr=3e-4), donate_argnums=0)
+
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    trainer = Trainer(
+        step_fn, state,
+        batch_fn=lambda s: {"tokens": jnp.asarray(data.global_batch(s))},
+        cfg=TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                          ckpt_every=100, log_every=20))
+    history = trainer.run()
+    losses = [h["loss"] for h in history if "loss" in h]
+    print(f"steps run: {len(losses)}; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if trainer.watchdog.flagged:
+        print(f"straggler steps flagged: {trainer.watchdog.flagged[:5]}")
+
+
+if __name__ == "__main__":
+    main()

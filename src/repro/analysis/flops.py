@@ -1,0 +1,224 @@
+"""Analytic FLOP model per (arch config x shape x mode).
+
+Returns *useful algorithmic* FLOPs (the MODEL_FLOPS of the roofline spec:
+6*N*D for dense training, 6*N_active*D for MoE, attention/SSD/WKV dynamic
+terms added), plus:
+
+  * fp4_gemm_flops -- the subset executed through fp4_linear (these run on
+    the int8 MXU at 2x bf16 throughput on the TPU adaptation);
+  * scan_corrections -- analytic body FLOPs x (trips-1) for each inner
+    `lax.scan` (XLA cost_analysis counts while bodies once; layer loops are
+    unrolled so only these algorithmic scans need correction). Train-mode
+    scans inside remat are multiplied by 4 (fwd + remat-recompute + 2x bwd),
+    serve-mode by 1 -- documented estimate, raw numbers kept alongside.
+
+All numbers are GLOBAL (whole-cluster); divide by chip count for per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+@dataclasses.dataclass
+class ScanCorrection:
+    name: str
+    body_flops: float        # per execution of the body, global
+    trips: int
+    mode_factor: float       # 1 serve, 4 train (fwd+remat+2bwd)
+
+    @property
+    def correction(self) -> float:
+        return self.body_flops * (self.trips - 1) * self.mode_factor
+
+    @property
+    def total(self) -> float:
+        return self.body_flops * self.trips * self.mode_factor
+
+
+def _attn_linear_ptok(cfg: ArchConfig) -> float:
+    dh = cfg.resolved_head_dim
+    return 2.0 * cfg.d_model * dh * (2 * cfg.n_heads + 2 * cfg.n_kv_heads)
+
+
+def _mla_linear_ptok(cfg: ArchConfig) -> float:
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    terms = (cfg.d_model * cfg.q_lora_rank +
+             cfg.q_lora_rank * H * qk +
+             cfg.d_model * (cfg.kv_lora_rank + cfg.qk_rope_dim) +
+             cfg.kv_lora_rank * H * (cfg.qk_nope_dim + cfg.v_head_dim) +
+             H * cfg.v_head_dim * cfg.d_model)
+    return 2.0 * terms
+
+
+def _ffn_ptok(cfg: ArchConfig, d_ff: int | None = None) -> float:
+    f = d_ff or cfg.d_ff
+    n_mats = 3  # glu
+    return 2.0 * n_mats * cfg.d_model * f
+
+
+def _moe_ptok(cfg: ArchConfig) -> float:
+    router = 2.0 * cfg.d_model * cfg.n_experts
+    return router + cfg.top_k * 2.0 * 3 * cfg.d_model * cfg.moe_d_ff
+
+
+def _ssm_linear_ptok(cfg: ArchConfig) -> float:
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    return 2.0 * cfg.d_model * (3 * di + 2 * cfg.ssm_state + H)
+
+
+def _rwkv_linear_ptok(cfg: ArchConfig) -> float:
+    D, F = cfg.d_model, cfg.d_ff
+    return 2.0 * (6 * D * D + 2 * 64 * D + 2 * D * F)
+
+
+def _attn_dynamic(cfg: ArchConfig, S_q: int, S_kv: int, window, causal=True):
+    """Useful score+PV FLOPs for one layer, per sequence (not per token)."""
+    dh = cfg.resolved_head_dim
+    hd = cfg.n_heads * dh
+    if S_q == 1:  # decode
+        return 4.0 * S_kv * hd
+    if window and S_kv > window:
+        return 4.0 * S_q * window * hd * (0.5 if causal else 1.0) * 2
+    eff = 0.5 if causal else 1.0
+    return 4.0 * S_q * S_kv * hd * eff
+
+
+def _ssd_dynamic(cfg: ArchConfig, S: int) -> float:
+    """Per layer per sequence (useful)."""
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    P, N = cfg.ssm_head_dim, cfg.ssm_state
+    L = min(cfg.ssm_chunk, S)
+    nc = max(1, S // L)
+    per_chunk = 2 * L * L * N + 2 * L * L * H * P + 6 * L * H * P * N
+    return nc * per_chunk
+
+
+def _wkv_dynamic(cfg: ArchConfig, S: int) -> float:
+    hd = cfg.ssm_head_dim
+    return 4.0 * S * cfg.d_model * hd
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec, mode: str) -> dict:
+    """mode: 'train' | 'prefill' | 'decode'. Returns global-FLOPs dict."""
+    B = shape.global_batch
+    S = shape.seq_len
+    plan = cfg.layer_plan()
+    mode_factor = 3.0 if mode == "train" else 1.0
+    train = mode == "train"
+
+    lin_ptok = 0.0       # per-token linear fwd flops (fp4 sites)
+    dyn_pseq = 0.0       # per-sequence dynamic fwd flops (non-fp4)
+    scans: list[ScanCorrection] = []
+
+    if cfg.enc_layers:  # whisper enc-dec
+        Senc = Sdec = (S // 2 if mode != "decode" else S)
+        D, F = cfg.d_model, cfg.d_ff
+        enc_lin = cfg.enc_layers * (2.0 * 4 * D * D + 2.0 * 2 * D * F)
+        dec_lin = cfg.n_layers * (2.0 * 8 * D * D + 2.0 * 2 * D * F)
+        if mode == "decode":
+            S_cache, Smem = S, S // 2
+            lin_decode = cfg.n_layers * (2.0 * 8 * D * D + 2.0 * 2 * D * F)
+            dyn = cfg.n_layers * (_attn_dynamic(cfg, 1, S_cache, None) +
+                                  _attn_dynamic(cfg, 1, Smem, None, False))
+            head = 2.0 * D * cfg.vocab_size
+            total = B * (lin_decode + dyn + head)
+            return {"model_flops": total, "fp4_gemm_flops": B * lin_decode,
+                    "scan_corrections": [], "tokens": B,
+                    "layers_fwd_flops": B * (lin_decode + dyn)}
+        dyn = (cfg.enc_layers * _attn_dynamic(cfg, Senc, Senc, None, False) +
+               cfg.n_layers * (_attn_dynamic(cfg, Sdec, Sdec, None) +
+                               _attn_dynamic(cfg, Sdec, Senc, None, False)))
+        head = 2.0 * D * cfg.vocab_size * Sdec
+        fwd = B * (enc_lin * Senc + dec_lin * Sdec + dyn + head)
+        fp4 = B * (enc_lin * Senc + dec_lin * Sdec)
+        if Senc > 2 * cfg.attn_chunk:
+            trips = -(-Senc // cfg.attn_chunk)
+            body = 4.0 * B * cfg.n_heads * cfg.resolved_head_dim * Senc * \
+                cfg.attn_chunk
+            n_scans = cfg.enc_layers + 2 * cfg.n_layers
+            scans.append(ScanCorrection(
+                "attn_chunks", body * n_scans, trips, 4.0 if train else 1.0))
+        return {"model_flops": fwd * mode_factor, "fp4_gemm_flops": fp4 * mode_factor,
+                "scan_corrections": scans, "tokens": B * Sdec,
+                "layers_fwd_flops": B * (enc_lin * Senc + dec_lin * Sdec + dyn)}
+
+    S_q = 1 if mode == "decode" else S
+    S_kv = S
+    n_chunk_attn_layers = 0
+    for layer in plan:
+        kind = layer["kind"]
+        if kind == "attn":
+            lin_ptok += _attn_linear_ptok(cfg)
+            lin_ptok += _moe_ptok(cfg) if layer.get("ffn") == "moe" else \
+                _ffn_ptok(cfg)
+            w = layer.get("window")
+            dyn_pseq += _attn_dynamic(cfg, S_q, S_kv, w)
+            if (mode != "decode" and not (w and S_q > w)
+                    and S_kv > 2 * cfg.attn_chunk):
+                n_chunk_attn_layers += 1
+        elif kind == "mla":
+            lin_ptok += _mla_linear_ptok(cfg) + _ffn_ptok(cfg)
+            qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+            dyn_pseq += _attn_dynamic(cfg, S_q, S_kv, None) * \
+                (qk / cfg.resolved_head_dim)
+            if mode != "decode" and S_kv > 2 * cfg.attn_chunk:
+                n_chunk_attn_layers += 1
+        elif kind == "shared_attn":
+            lin_ptok += _attn_linear_ptok(cfg) + _ffn_ptok(cfg)
+            dyn_pseq += _attn_dynamic(cfg, S_q, S_kv, None)
+            if mode != "decode" and S_kv > 2 * cfg.attn_chunk:
+                n_chunk_attn_layers += 1
+        elif kind == "ssm":
+            lin_ptok += _ssm_linear_ptok(cfg)
+            if mode == "decode":
+                di = cfg.ssm_expand * cfg.d_model
+                dyn_pseq += 6.0 * di * cfg.ssm_state
+            else:
+                dyn_pseq += _ssd_dynamic(cfg, S)
+        elif kind == "rwkv":
+            lin_ptok += _rwkv_linear_ptok(cfg)
+            dyn_pseq += _wkv_dynamic(cfg, S_q if mode == "decode" else S)
+
+    head_ptok = 2.0 * cfg.d_model * cfg.vocab_size
+    tokens = B * S_q
+    fwd = tokens * (lin_ptok + head_ptok) + B * dyn_pseq
+    fp4 = tokens * lin_ptok  # head stays bf16 (policy.quantize_head=False)
+
+    # --- scan corrections -------------------------------------------------
+    if n_chunk_attn_layers and mode != "decode":
+        trips = -(-S_kv // cfg.attn_chunk)
+        body = 4.0 * B * cfg.n_heads * cfg.resolved_head_dim * S_q * \
+            cfg.attn_chunk
+        scans.append(ScanCorrection("attn_chunks",
+                                    body * n_chunk_attn_layers, trips,
+                                    4.0 if train else 1.0))
+    n_ssm = sum(1 for l in plan if l["kind"] == "ssm")
+    if n_ssm and mode != "decode":
+        L = min(cfg.ssm_chunk, S)
+        trips = max(1, S // L)
+        body = B * _ssd_dynamic(cfg, L)
+        scans.append(ScanCorrection("ssd_chunks", body * n_ssm, trips,
+                                    4.0 if train else 1.0))
+    n_rwkv = sum(1 for l in plan if l["kind"] == "rwkv")
+    if n_rwkv and mode != "decode":
+        body = B * 4.0 * cfg.d_model * cfg.ssm_head_dim
+        scans.append(ScanCorrection("wkv_steps", body * n_rwkv, S,
+                                    4.0 if train else 1.0))
+    # loss chunking is unrolled for <=16 chunks (exact); larger S in train
+    # would scan -- train_4k uses 4096/512 = 8 chunks (unrolled).
+
+    return {"model_flops": fwd * mode_factor,
+            "fp4_gemm_flops": fp4 * mode_factor,
+            "scan_corrections": scans, "tokens": tokens,
+            "layers_fwd_flops": tokens * lin_ptok + B * dyn_pseq}
+
+
+def param_count(params) -> int:
+    import jax
+    return sum(p.size for p in jax.tree.leaves(params))

@@ -1,0 +1,206 @@
+"""Optimized-HLO text analysis: per-device collective wire bytes.
+
+`collective_bytes(hlo_text)` parses every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, computes ring-algorithm
+wire bytes from the operand shape and replica-group size, and multiplies
+collectives inside `while` bodies by the loop trip count (parsed from the
+loop condition's comparison constant).
+
+Trip-count parsing is a heuristic (standard XLA counted-loop pattern:
+`compare(gte, constant(N)), direction=LT`); every multiplied entry is
+flagged in the returned breakdown so EXPERIMENTS.md can show raw vs
+corrected numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# computation header: name, arbitrary (possibly nested) signature, '->', '{'
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*condition=%?([\w\.\-]+).*body=%?([\w\.\-]+)")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONST_CMP_RE = re.compile(r"compare\([^)]*\).*direction=LT")
+_CONST_RE = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of the first shape in a string like 'f32[8,128]{1,0}'.
+    For tuple shapes '(f32[..], u32[..])' sums components."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[num_groups, group_size]<=[total]
+        return int(m.group(2))
+    return default
+
+
+def _wire_factor(op: str, n: int) -> float:
+    """Ring-algorithm wire bytes per device as a multiple of payload bytes."""
+    if op == "collective-permute":
+        return 1.0  # point-to-point: group size is not meaningful
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter", "all-to-all",
+              "ragged-all-to-all"):
+        return (n - 1) / n
+    if op == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+@dataclasses.dataclass
+class CollectiveEntry:
+    op: str
+    payload_bytes: int
+    wire_bytes: float
+    group_size: int
+    computation: str
+    multiplier: int  # while-body trip count product (1 = top level)
+    line_no: int
+
+
+def _split_computations(text: str) -> dict[str, list[tuple[int, str]]]:
+    comps: dict[str, list[tuple[int, str]]] = {}
+    current = None
+    for i, line in enumerate(text.splitlines()):
+        stripped = line.strip()
+        m = _COMP_START_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            comps[current].append((i, stripped))
+    return comps
+
+
+def _find_trip_count(cond_lines: list[tuple[int, str]]) -> int | None:
+    """Counted-loop pattern: the comparison constant in the condition."""
+    consts = {}
+    for _, l in cond_lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*s(?:32|64)\[\]\s*constant\((\d+)\)", l)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for _, l in cond_lines:
+        if "compare(" in l and "direction=LT" in l:
+            # operands of compare
+            m = re.search(r"compare\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)", l)
+            if m:
+                for name in m.groups():
+                    if name in consts:
+                        return consts[name]
+    # fallback: any integer constant (flagged by caller)
+    if consts:
+        return max(consts.values())
+    return None
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    comps = _split_computations(hlo_text)
+
+    # while ops: map body computation -> trip count
+    body_trips: dict[str, int] = {}
+    cond_of_body: dict[str, str] = {}
+    for cname, lines in comps.items():
+        for _, l in lines:
+            m = _WHILE_RE.search(l)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                cond_of_body[body] = cond
+                trips = _find_trip_count(comps.get(cond, []))
+                body_trips[body] = trips if trips is not None else 1
+
+    # nested whiles: body computations containing while ops multiply
+    def multiplier_of(comp: str, seen=()) -> int:
+        mult = 1
+        # find enclosing bodies: is `comp` a while body?
+        if comp in body_trips:
+            mult *= max(1, body_trips[comp])
+        return mult
+
+    # build parent chain: computation -> enclosing body multiplier. We only
+    # handle one nesting level of interest (layer scans); deeper nesting
+    # multiplies conservatively by each enclosing body found via call sites.
+    calls: dict[str, set[str]] = defaultdict(set)  # callee -> callers
+    for cname, lines in comps.items():
+        for _, l in lines:
+            m = _WHILE_RE.search(l)
+            if m:
+                calls[m.group(2)].add(cname)
+
+    def full_multiplier(comp: str, depth=0) -> int:
+        if depth > 8:
+            return 1
+        mult = multiplier_of(comp)
+        for caller in calls.get(comp, ()):  # enclosing computations
+            mult *= full_multiplier(caller, depth + 1)
+        return mult
+
+    entries: list[CollectiveEntry] = []
+    for cname, lines in comps.items():
+        cmult = full_multiplier(cname)
+        for line_no, l in lines:
+            for op in _COLLECTIVES:
+                # match '<shape> op(' and async '-start' forms; skip -done
+                if re.search(rf"=\s*[^=]*\b{op}(?:-start)?\(", l) and \
+                        f"{op}-done" not in l:
+                    lhs = l.split("=", 1)[1]
+                    payload = _shape_bytes(lhs.split(f"{op}")[0])
+                    n = _group_size(l)
+                    entries.append(CollectiveEntry(
+                        op=op, payload_bytes=payload,
+                        wire_bytes=payload * _wire_factor(op, n),
+                        group_size=n, computation=cname,
+                        multiplier=cmult, line_no=line_no))
+                    break
+
+    by_op: dict[str, float] = defaultdict(float)
+    by_op_raw: dict[str, float] = defaultdict(float)
+    for e in entries:
+        by_op[e.op] += e.wire_bytes * e.multiplier
+        by_op_raw[e.op] += e.wire_bytes
+    total = sum(by_op.values())
+    total_raw = sum(by_op_raw.values())
+    return {
+        "total_wire_bytes": total,
+        "total_wire_bytes_raw": total_raw,
+        "by_op": dict(by_op),
+        "count": len(entries),
+        "multiplied_entries": sum(1 for e in entries if e.multiplier > 1),
+        "while_trip_counts": body_trips,
+    }

@@ -1,0 +1,73 @@
+"""Generate EXPERIMENTS.md §Roofline table from dry-run artifacts.
+
+Prefers `artifacts/dryrun2` (collective parser with while-body trip-count
+multiplication) and falls back to `artifacts/dryrun` (pre-fix: in-scan
+collectives counted once -- a lower bound, flagged with *).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def merged_artifacts(primary="artifacts/dryrun2", fallback="artifacts/dryrun",
+                     mesh="single"):
+    rows = {}
+    for d, flag in ((fallback, True), (primary, False)):
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            name = os.path.basename(path)
+            if "sweep_log" in name or name.count("__") != 2:
+                continue  # variants have tags; baselines only
+            with open(path) as f:
+                r = json.load(f)
+            if r.get("mesh") != mesh and not r.get("skipped"):
+                continue
+            if r.get("skipped") and r.get("mesh", mesh) != mesh:
+                continue
+            key = (r["arch"], r["shape"])
+            r["_stale_collectives"] = flag
+            rows[key] = r
+    return rows
+
+
+def render(mesh="single") -> str:
+    rows = merged_artifacts(mesh=mesh)
+    lines = [
+        "| arch | shape | compute(s) | memory(s) | collective(s) | dominant "
+        "| useful | peak GB* | MFU bound | HW util |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for (arch, shape) in sorted(rows, key=lambda k: (k[0], order.index(k[1]))):
+        r = rows[(arch, shape)]
+        if r.get("skipped"):
+            lines.append(f"| {arch} | {shape} | — | — | — | skipped"
+                         f" (full-attn @512K) | — | — | — | — |")
+            continue
+        stale = "†" if r.get("_stale_collectives") else ""
+        rl = r["roofline"]
+        hw = r.get("hw_util_bound", 0.0)
+        lines.append(
+            f"| {arch} | {shape} | {rl['compute_fp4_s']:.3g} | "
+            f"{rl['memory_s']:.3g} | {rl['collective_s']:.3g}{stale} | "
+            f"**{rl['dominant']}** | {r['flops']['useful_ratio']:.2f} | "
+            f"{r['memory_analysis']['peak_estimate_gb']:.1f} | "
+            f"{r['mfu_bound']:.3f} | {hw:.3f} |")
+    return "\n".join(lines)
+
+
+def inject(markdown_path="EXPERIMENTS.md", marker="<!-- ROOFLINE_TABLE -->",
+           content: str | None = None):
+    content = content or render()
+    with open(markdown_path) as f:
+        text = f.read()
+    if marker not in text:
+        raise ValueError(f"{marker} not found")
+    text = text.replace(marker, content, 1)
+    with open(markdown_path, "w") as f:
+        f.write(text)
+
+
+if __name__ == "__main__":
+    print(render())

@@ -1,0 +1,14 @@
+"""Config registry: importing this package registers all architectures."""
+from . import (gemma2_9b, gemma3_27b, llama2_paper, minicpm3_4b,
+               moonshot_16b, pixtral_12b, qwen3_moe_30b, qwen15_32b,
+               rwkv6_1p6b, whisper_medium, zamba2_7b)
+from .base import SHAPES, ArchConfig, ShapeSpec, get_config, list_archs
+
+ASSIGNED_ARCHS = [
+    "whisper-medium", "qwen1.5-32b", "gemma3-27b", "minicpm3-4b",
+    "gemma2-9b", "qwen3-moe-30b-a3b", "moonshot-v1-16b-a3b", "zamba2-7b",
+    "pixtral-12b", "rwkv6-1.6b",
+]
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "get_config", "list_archs",
+           "ASSIGNED_ARCHS"]

@@ -1,0 +1,180 @@
+"""Architecture configs + the assigned input-shape grid.
+
+Every assigned architecture gets one `ArchConfig` (exact numbers from the
+assignment table) plus a `smoke()` reduction used by CPU tests. Shapes are
+the four assigned cells; `applicable_shapes()` encodes the skip rules
+(decode for encoder-only, long_500k for pure full-attention archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+# ---------------------------------------------------------------------------
+# Shapes (assignment): seq_len x global_batch.
+# train_* lowers train_step; prefill_* lowers serve prefill;
+# decode_*/long_* lower serve_step (1 new token against a seq_len KV cache).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None          # default d_model // n_heads
+
+    # attention variants
+    attn_pattern: str = "global"         # global | local_global_5_1 | alt_local_global
+    window_size: int = 4096
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rope_theta_local: float | None = None  # gemma3: local layers use 10k, global 1M
+
+    # MLA (minicpm3)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    shared_attn_every: int = 0           # zamba2: shared attn block cadence
+    rwkv: bool = False
+
+    # enc-dec (whisper)
+    enc_layers: int = 0
+
+    # frontend
+    frontend: str = "tokens"             # tokens | embeddings (stubbed modality)
+
+    # norm / activation / misc
+    norm_type: str = "rmsnorm"           # rmsnorm | layernorm
+    norm_plus_one: bool = False          # gemma convention
+    act: str = "silu"                    # silu | gelu (glu variants implied)
+    tie_embeddings: bool = True
+    embed_scale_sqrt_d: bool = False     # gemma multiplies embeddings by sqrt(d)
+
+    # execution knobs
+    remat: bool = True
+    remat_policy: str = "full"       # full | dots (save dot outputs)
+    scan_layers: bool = False        # stack repeating layer groups (dry-run)
+    embed_onehot: bool = False       # vocab-parallel one-hot embedding
+    mla_pad_heads: int = 0           # pad MLA heads for TP divisibility
+    attn_chunk: int = 1024
+    loss_chunk: int = 512
+    cache_dtype: str = "bfloat16"        # bfloat16 | float8_e4m3fn
+    max_decode_len: int = 0              # 0 = use shape seq_len
+
+    source: str = ""                     # provenance note
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    # ---- layer plan ------------------------------------------------------
+    def layer_plan(self) -> list[dict]:
+        """One dict per decoder layer describing the block stack."""
+        plan = []
+        for i in range(self.n_layers):
+            if self.rwkv:
+                plan.append({"kind": "rwkv"})
+                continue
+            if self.shared_attn_every:
+                if (i + 1) % self.shared_attn_every == 0:
+                    plan.append({"kind": "shared_attn"})
+                else:
+                    plan.append({"kind": "ssm"})
+                continue
+            if self.ssm_state and not self.shared_attn_every:
+                plan.append({"kind": "ssm"})
+                continue
+            entry = {"kind": "mla" if self.use_mla else "attn"}
+            if self.attn_pattern == "local_global_5_1":
+                is_global = (i + 1) % 6 == 0
+            elif self.attn_pattern == "alt_local_global":
+                is_global = i % 2 == 1
+            else:
+                is_global = True
+            entry["window"] = None if is_global else self.window_size
+            entry["rope_theta"] = (self.rope_theta if is_global or
+                                   self.rope_theta_local is None
+                                   else self.rope_theta_local)
+            entry["ffn"] = "moe" if self.n_experts else "dense"
+            plan.append(entry)
+        return plan
+
+    def applicable_shapes(self) -> list[str]:
+        """Assigned-shape skip rules (documented in DESIGN.md §5)."""
+        shapes = ["train_4k", "prefill_32k", "decode_32k"]
+        subquadratic = (self.rwkv or self.ssm_state > 0 or
+                        self.attn_pattern in ("local_global_5_1",
+                                              "alt_local_global"))
+        if subquadratic:
+            shapes.append("long_500k")
+        return shapes
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], ArchConfig]] = {}
+_SMOKE: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ArchConfig],
+             smoke: Callable[[], ArchConfig]) -> None:
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    import repro.configs  # noqa: F401  (triggers registration)
+    table = _SMOKE if smoke else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

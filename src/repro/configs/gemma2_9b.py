@@ -1,0 +1,27 @@
+"""gemma2-9b [dense]: 42L, d=3584, 16H (GQA kv=8), ff=14336, vocab=256000.
+Alternating local/global attention (window 4096), attn softcap 50, final
+logit softcap 30, sandwich norms. [arXiv:2408.00118; hf]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="gemma2-9b", family="dense",
+        n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, head_dim=256,
+        d_ff=14336, vocab_size=256000,
+        attn_pattern="alt_local_global", window_size=4096,
+        attn_softcap=50.0, final_softcap=30.0,
+        norm_plus_one=True, embed_scale_sqrt_d=True,
+        act="gelu", tie_embeddings=True,
+        source="arXiv:2408.00118",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, window_size=16, attn_chunk=32,
+        loss_chunk=32, remat=False)
+
+
+register("gemma2-9b", full, smoke)

@@ -1,0 +1,28 @@
+"""gemma3-27b [dense]: 62L, d=5376, 32H (GQA kv=16), ff=21504,
+vocab=262144. 5:1 local:global attention (window 1024), dual rope bases
+(10k local / 1M global), qk-norm, sandwich norms, 128k context.
+[hf:google/gemma-3-1b-pt; unverified]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="gemma3-27b", family="dense",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+        d_ff=21504, vocab_size=262144,
+        attn_pattern="local_global_5_1", window_size=1024,
+        rope_theta=1_000_000.0, rope_theta_local=10_000.0,
+        qk_norm=True, norm_plus_one=True, embed_scale_sqrt_d=True,
+        act="gelu", tie_embeddings=True,
+        source="hf:google/gemma-3-1b-pt",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=6, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, window_size=16, attn_chunk=32,
+        loss_chunk=32, remat=False)
+
+
+register("gemma3-27b", full, smoke)

@@ -1,0 +1,41 @@
+"""The paper's own LLaMA-2 experiment configs (§4.1): 400M (Fig. 1),
+1.3B / 7B / 13B (Fig. 5, Tables 2-3), trained on DCLM with seq 2048.
+These are the models the FP4 recipe was validated on."""
+from .base import ArchConfig, register
+
+
+def _llama(name, n_layers, d_model, n_heads, d_ff) -> ArchConfig:
+    return ArchConfig(
+        name=name, family="dense",
+        n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+        n_kv_heads=n_heads, d_ff=d_ff, vocab_size=32000,
+        act="silu", tie_embeddings=False, rope_theta=10_000.0,
+        source="paper §4.1 (LLaMA-2 family)",
+    )
+
+
+def llama2_400m() -> ArchConfig:
+    return _llama("llama2-400m", 24, 1024, 16, 2816)
+
+
+def llama2_1p3b() -> ArchConfig:
+    return _llama("llama2-1.3b", 24, 2048, 16, 5504)
+
+
+def llama2_7b() -> ArchConfig:
+    return _llama("llama2-7b", 32, 4096, 32, 11008)
+
+
+def llama2_13b() -> ArchConfig:
+    return _llama("llama2-13b", 40, 5120, 40, 13824)
+
+
+def _smoke() -> ArchConfig:
+    return _llama("llama2-smoke", 2, 64, 4, 128).replace(
+        vocab_size=256, attn_chunk=32, loss_chunk=32, remat=False)
+
+
+register("llama2-400m", llama2_400m, _smoke)
+register("llama2-1.3b", llama2_1p3b, _smoke)
+register("llama2-7b", llama2_7b, _smoke)
+register("llama2-13b", llama2_13b, _smoke)

@@ -1,0 +1,27 @@
+"""minicpm3-4b [dense]: 62L, d=2560, 40H (GQA kv=40), ff=6400,
+vocab=73448, Multi-head Latent Attention (q_lora=768, kv_lora=256,
+qk_nope=64, qk_rope=32, v_head=64). [hf:openbmb/MiniCPM3-4B; hf]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="minicpm3-4b", family="dense",
+        n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40,
+        d_ff=6400, vocab_size=73448,
+        use_mla=True, q_lora_rank=768, kv_lora_rank=256,
+        qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+        act="silu", tie_embeddings=True,
+        source="hf:openbmb/MiniCPM3-4B",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=256, q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_dim=8, qk_rope_dim=8, v_head_dim=8,
+        attn_chunk=32, loss_chunk=32, remat=False)
+
+
+register("minicpm3-4b", full, smoke)

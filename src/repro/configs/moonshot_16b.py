@@ -1,0 +1,25 @@
+"""moonshot-v1-16b-a3b [moe]: 48L, d=2048, 16H (GQA kv=16), per-expert
+ff=1408, vocab=163840, MoE 64 experts top-6 (kimi/moonlight).
+[hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="moonshot-v1-16b-a3b", family="moe",
+        n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1408, vocab_size=163840,
+        n_experts=64, top_k=6, moe_d_ff=1408,
+        rope_theta=50_000.0, act="silu", tie_embeddings=False,
+        source="hf:moonshotai/Moonlight-16B-A3B",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=64,
+        vocab_size=256, n_experts=8, top_k=2, moe_d_ff=64,
+        attn_chunk=32, loss_chunk=32, remat=False)
+
+
+register("moonshot-v1-16b-a3b", full, smoke)

@@ -1,0 +1,25 @@
+"""pixtral-12b [vlm]: 40L, d=5120, 32H (GQA kv=8), ff=14336, vocab=131072.
+Mistral-Nemo backbone (head_dim=128); pixtral-ViT frontend stubbed --
+input_specs provides precomputed patch+text embeddings.
+[hf:mistralai/Pixtral-12B-2409; unverified]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="pixtral-12b", family="vlm",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab_size=131072,
+        frontend="embeddings", rope_theta=1_000_000.0, act="silu",
+        tie_embeddings=False,
+        source="hf:mistralai/Pixtral-12B-2409",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, attn_chunk=32, loss_chunk=32, remat=False)
+
+
+register("pixtral-12b", full, smoke)

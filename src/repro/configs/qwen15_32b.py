@@ -1,0 +1,23 @@
+"""qwen1.5-32b [dense]: 64L, d=5120, 40H (GQA kv=40), ff=27392,
+vocab=152064, QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-32b", family="dense",
+        n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40,
+        d_ff=27392, vocab_size=152064,
+        qkv_bias=True, rope_theta=1_000_000.0, act="silu",
+        tie_embeddings=False,
+        source="hf:Qwen/Qwen1.5-0.5B",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=160,
+        vocab_size=256, attn_chunk=32, loss_chunk=32, remat=False)
+
+
+register("qwen1.5-32b", full, smoke)

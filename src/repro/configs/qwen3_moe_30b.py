@@ -1,0 +1,26 @@
+"""qwen3-moe-30b-a3b [moe]: 48L, d=2048, 32H (GQA kv=4), per-expert ff=768,
+vocab=151936, MoE 128 experts top-8, qk-norm.
+[hf:Qwen/Qwen3-30B-A3B; hf]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-30b-a3b", family="moe",
+        n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+        d_ff=768, vocab_size=151936,
+        n_experts=128, top_k=8, moe_d_ff=768,
+        qk_norm=True, rope_theta=1_000_000.0, act="silu",
+        tie_embeddings=False,
+        source="hf:Qwen/Qwen3-30B-A3B",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=256, n_experts=8, top_k=2, moe_d_ff=64,
+        attn_chunk=32, loss_chunk=32, remat=False)
+
+
+register("qwen3-moe-30b-a3b", full, smoke)

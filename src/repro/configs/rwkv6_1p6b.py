@@ -1,0 +1,24 @@
+"""rwkv6-1.6b [ssm]: 24L, d=2048, attn-free (RWKV6 'Finch' time-mix with
+data-dependent decay), ff=7168, vocab=65536. [arXiv:2404.05892; unverified]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="rwkv6-1.6b", family="ssm",
+        n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=7168, vocab_size=65536,
+        rwkv=True, ssm_head_dim=64,
+        act="relu", tie_embeddings=False,
+        source="arXiv:2404.05892",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=256, ssm_head_dim=16, attn_chunk=32, loss_chunk=32,
+        remat=False)
+
+
+register("rwkv6-1.6b", full, smoke)

@@ -1,0 +1,24 @@
+"""whisper-medium [audio]: enc-dec, conv frontend stubbed (precomputed frame
+embeddings). 24L enc + 24L dec, d=1024, 16H MHA, ff=4096, vocab=51865.
+[arXiv:2212.04356; unverified]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-medium", family="encdec",
+        n_layers=24, enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab_size=51865,
+        frontend="embeddings", norm_type="layernorm", act="gelu",
+        qkv_bias=True, tie_embeddings=True,
+        source="arXiv:2212.04356",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, attn_chunk=32, loss_chunk=32, remat=False)
+
+
+register("whisper-medium", full, smoke)

@@ -1,0 +1,26 @@
+"""zamba2-7b [hybrid]: 81L, d=3584, ff=14336, vocab=32000, ssm_state=64.
+Mamba2 backbone + shared-weight full-attention block every 6th layer
+(32H attention in the shared block). [arXiv:2411.15242; unverified]"""
+from .base import ArchConfig, register
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+        d_ff=14336, vocab_size=32000,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+        shared_attn_every=6,
+        act="silu", tie_embeddings=True,
+        source="arXiv:2411.15242",
+    )
+
+
+def smoke() -> ArchConfig:
+    return full().replace(
+        n_layers=6, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=256, ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+        attn_chunk=32, loss_chunk=32, remat=False)
+
+
+register("zamba2-7b", full, smoke)

@@ -1,0 +1,20 @@
+"""Core FP4 training library (the paper's contribution, in JAX).
+
+Public surface:
+  formats   -- E2M1/E1M2/E3M0 grids, int8 exactness, 4-bit packing
+  quantize  -- absmax vector-wise LUT quantization (+ fp8 helpers)
+  dge       -- Differentiable Gradient Estimator custom_vjp (paper §3.1)
+  occ       -- Outlier Clamping & Compensation (paper §3.2)
+  fp4_gemm  -- FP4 GeMM with vector-wise rescale + backends
+  linear    -- fp4_linear layer (OCC + GeMM + compensation + bias)
+  policy    -- QuantPolicy presets (paper Fig. 6 experimental arms)
+"""
+from . import dge, formats, occ, policy, quantize
+from .fp4_gemm import fp4_matmul
+from .linear import fp4_linear
+from .policy import PRESETS, QuantPolicy, get_policy
+
+__all__ = [
+    "dge", "formats", "occ", "policy", "quantize",
+    "fp4_matmul", "fp4_linear", "PRESETS", "QuantPolicy", "get_policy",
+]

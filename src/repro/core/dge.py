@@ -1,0 +1,101 @@
+"""Differentiable Gradient Estimator (paper §3.1, Appendix C).
+
+Forward: hard LUT quantization (identical bits to `quantize.lut_round`).
+Backward: the weight gradient is multiplied element-wise by f'(x), the
+derivative of the power-law soft-step that approximates the quantizer
+inside each quantization interval (Eq. 8 generalized to E2M1's variable
+interval widths):
+
+    t      = (x - lo) / delta            position inside interval [lo, hi]
+    f'(x)  = (1/k) * |2t - 1| ** (1/k - 1)
+
+clipped at `clip` (= 3.0, App. C.3 shows clipping is equivalent to the
+eps-smoothed derivative). Outside the representable range the quantizer
+saturates, so f' = 0 there (absmax scaling guarantees |x| <= MAX for the
+tensor the estimator is applied to, so this only matters for adversarial
+inputs).
+
+Appendix C.2 proves the channel-wise scale and its inverse cancel through
+the chain rule, so DGE applies to the *scaled* weight tensor directly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import formats, quantize
+from .formats import E2M1, FP4Format
+
+DEFAULT_K = 5.0
+DEFAULT_CLIP = 3.0
+
+
+def dge_derivative(x: jnp.ndarray, k: float = DEFAULT_K,
+                   clip: float = DEFAULT_CLIP,
+                   fmt: FP4Format | str = E2M1) -> jnp.ndarray:
+    """f'(x) of Eq. (8) over the full E2M1 range, clipped (App. C.3)."""
+    fmt = formats.get_format(fmt)
+    los, deltas = formats.intervals(fmt)
+    xf = x.astype(jnp.float32)
+    # Interval index: values[i] <= x < values[i+1]. searchsorted over the
+    # interval lower edges gives i+1 for interior points.
+    idx = jnp.clip(jnp.searchsorted(los, xf, side="right") - 1, 0, los.shape[0] - 1)
+    lo = los[idx]
+    delta = deltas[idx]
+    t = (xf - lo) / delta
+    inner = jnp.abs(2.0 * t - 1.0)
+    # |2t-1|^(1/k - 1) diverges at t=1/2; clip per App. C.3.
+    deriv = (1.0 / k) * jnp.power(jnp.maximum(inner, _pow_floor(k, clip)), 1.0 / k - 1.0)
+    deriv = jnp.minimum(deriv, clip)
+    # Saturation outside the representable range.
+    in_range = jnp.abs(xf) <= fmt.max_value
+    return jnp.where(in_range, deriv, 0.0).astype(x.dtype)
+
+
+def _pow_floor(k: float, clip: float) -> float:
+    """Smallest |2t-1| whose derivative stays <= clip: solves
+    (1/k)*m^(1/k-1) = clip  =>  m = (k*clip)^(k/(1-k)). Flooring the power
+    argument (instead of only min-ing the result) keeps the computation
+    finite in f32 even exactly at t=1/2."""
+    return float((k * clip) ** (k / (1.0 - k)))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def dge_quantize(x_scaled: jnp.ndarray, k: float = DEFAULT_K,
+                 clip: float = DEFAULT_CLIP, fmt_name: str = "e2m1") -> jnp.ndarray:
+    """Hard LUT quantization forward; DGE-corrected gradient backward.
+
+    Applies to the *scaled* tensor (|x| <= MAX). Non-diff args are static so
+    the estimator stays a fixed function (paper §5: no learnable quantizer).
+    """
+    return quantize.lut_round(x_scaled, fmt_name)
+
+
+def _dge_fwd(x_scaled, k, clip, fmt_name):
+    return dge_quantize(x_scaled, k, clip, fmt_name), x_scaled
+
+
+def _dge_bwd(k, clip, fmt_name, x_scaled, g):
+    return (g * dge_derivative(x_scaled, k, clip, fmt_name).astype(g.dtype),)
+
+
+dge_quantize.defvjp(_dge_fwd, _dge_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_quantize(x_scaled: jnp.ndarray, fmt_name: str = "e2m1") -> jnp.ndarray:
+    """Straight-through estimator baseline: f'(x) == 1 (paper Fig. 3)."""
+    return quantize.lut_round(x_scaled, fmt_name)
+
+
+def _ste_fwd(x_scaled, fmt_name):
+    return ste_quantize(x_scaled, fmt_name), None
+
+
+def _ste_bwd(fmt_name, _, g):
+    return (g,)
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,150 @@
+"""Low-precision float formats: FP4 (E2M1/E1M2/E3M0) and FP8 helpers.
+
+FP4 value grids follow the paper's Appendix A (Table 4). E2M1 is the
+production format (balanced dynamic range vs precision); the alternates are
+kept for ablations. Round-to-nearest boundaries reproduce the paper's CUDA
+LUT kernel exactly (ties resolved identically to the published thresholds:
+e.g. values in [-0.25, 0.25) -> 0, [2.5, 3.5) -> 3).
+
+TPU adaptation: every E2M1 grid value x2 is a small integer, so the grid is
+exactly representable in int8 -- `to_int8_codes` / `from_int8_codes` expose
+that mapping for the int8-MXU GeMM path, and `pack_e2m1` / `unpack_e2m1`
+pack two 4-bit code indices per byte for 4-bit HBM storage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FP4Format:
+    """A 16-entry 4-bit float format described by its non-negative grid."""
+
+    name: str
+    # Non-negative representable values, ascending, starting at 0.
+    positive_values: tuple[float, ...]
+
+    @property
+    def max_value(self) -> float:
+        return self.positive_values[-1]
+
+    @property
+    def values(self) -> np.ndarray:
+        """All representable values, ascending (15 distinct: +/-0 collapse)."""
+        pos = np.asarray(self.positive_values, dtype=np.float64)
+        return np.concatenate([-pos[:0:-1], pos])
+
+    @property
+    def boundaries(self) -> np.ndarray:
+        """Round-to-nearest decision boundaries (midpoints), len = len(values)-1."""
+        v = self.values
+        return (v[:-1] + v[1:]) / 2.0
+
+
+# Paper Table 4 formats.
+E2M1 = FP4Format("e2m1", (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0))
+E1M2 = FP4Format("e1m2", (0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5))
+E3M0 = FP4Format("e3m0", (0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0))
+
+FORMATS: dict[str, FP4Format] = {f.name: f for f in (E2M1, E1M2, E3M0)}
+
+# FP8 dynamic ranges (OCP spec): E4M3 max 448, E5M2 max 57344.
+FP8_E4M3_MAX = 448.0
+FP8_E5M2_MAX = 57344.0
+
+
+@lru_cache(maxsize=None)
+def _grid_arrays(fmt_name: str):
+    # Cached as NUMPY (never jnp): jnp constants created inside a trace are
+    # tracers and must not be cached across traces.
+    fmt = FORMATS[fmt_name]
+    values = np.asarray(fmt.values, dtype=np.float32)
+    bounds = np.asarray(fmt.boundaries, dtype=np.float32)
+    return values, bounds
+
+
+def grid(fmt: FP4Format | str):
+    """(values, boundaries) as jnp f32 arrays for a format."""
+    name = fmt if isinstance(fmt, str) else fmt.name
+    values, bounds = _grid_arrays(name)
+    return jnp.asarray(values), jnp.asarray(bounds)
+
+
+def get_format(fmt: FP4Format | str) -> FP4Format:
+    return fmt if isinstance(fmt, FP4Format) else FORMATS[fmt]
+
+
+# ---------------------------------------------------------------------------
+# Interval metadata for DGE: for each grid value index i (< len-1), the
+# interval is [values[i], values[i+1]] with width delta[i]. DGE evaluates the
+# soft-step derivative relative to the interval containing x.
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _interval_arrays(fmt_name: str):
+    fmt = FORMATS[fmt_name]
+    v = fmt.values
+    los = np.asarray(v[:-1], dtype=np.float32)
+    deltas = np.asarray(v[1:] - v[:-1], dtype=np.float32)
+    return los, deltas
+
+
+def intervals(fmt: FP4Format | str):
+    """(interval_lows, interval_widths) for DGE derivative evaluation."""
+    name = fmt if isinstance(fmt, str) else fmt.name
+    los, deltas = _interval_arrays(name)
+    return jnp.asarray(los), jnp.asarray(deltas)
+
+
+# ---------------------------------------------------------------------------
+# int8 exactness (TPU MXU path): E2M1 values x2 are integers.
+# ---------------------------------------------------------------------------
+
+E2M1_INT8_SCALE = 2  # int8_code = value * 2, exactly.
+
+
+def to_int8_codes(x_on_grid: jnp.ndarray) -> jnp.ndarray:
+    """Map values on the E2M1 grid to exact int8 (value*2). Input must already
+    lie on the grid; this is a dtype/layout change, not a rounding step."""
+    return jnp.round(x_on_grid * E2M1_INT8_SCALE).astype(jnp.int8)
+
+
+def from_int8_codes(codes: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return codes.astype(dtype) / E2M1_INT8_SCALE
+
+
+# ---------------------------------------------------------------------------
+# 4-bit packing: 2 grid indices per uint8 byte (HBM storage path).
+# Index layout: value index in [0, 15) over the ascending 15-value grid;
+# index 15 unused (E2M1 has +/-0 collapsed).
+# ---------------------------------------------------------------------------
+
+def values_to_indices(x_on_grid: jnp.ndarray, fmt: FP4Format | str = E2M1) -> jnp.ndarray:
+    values, bounds = grid(fmt)
+    return jnp.searchsorted(bounds, x_on_grid, side="right").astype(jnp.uint8)
+
+
+def indices_to_values(idx: jnp.ndarray, fmt: FP4Format | str = E2M1,
+                      dtype=jnp.float32) -> jnp.ndarray:
+    values, _ = grid(fmt)
+    return values.astype(dtype)[idx]
+
+
+def pack_e2m1(idx: jnp.ndarray) -> jnp.ndarray:
+    """Pack an even-length last dim of 4-bit indices into uint8 pairs."""
+    if idx.shape[-1] % 2:
+        raise ValueError("last dim must be even to pack 2 codes/byte")
+    lo = idx[..., 0::2]
+    hi = idx[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_e2m1(packed: jnp.ndarray) -> jnp.ndarray:
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

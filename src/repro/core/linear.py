@@ -1,0 +1,50 @@
+"""FP4 linear layer: OCC on the activation, FP4 GeMM, compensation, bias.
+
+    y = FP4GeMM(clamp(a), w) + compensate(a - clamp(a), w) + b
+
+This is the unit the paper drops into every Transformer GeMM site (QKV, O,
+MLP up/down, expert FFNs, MLA projections, SSM in/out projections, ...).
+The compensation path runs in bf16 ("high precision sparse" in the paper;
+masked-dense or top-k-channel skinny GeMM on TPU -- see core/occ.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import occ as occ_mod
+from .fp4_gemm import fp4_matmul
+from .policy import QuantPolicy
+
+
+def fp4_linear(a: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
+               *, policy: QuantPolicy) -> jnp.ndarray:
+    """a: (..., K), w: (K, N), optional bias (N,)."""
+    if not policy.enabled:
+        y = jnp.matmul(a, w, preferred_element_type=jnp.float32)
+        y = y.astype(policy.compute_dtype)
+        return y + b.astype(y.dtype) if b is not None else y
+
+    if policy.occ and policy.a_quant != "none":
+        a_c, delta = occ_mod.clamp_and_residual(a, policy.occ_alpha,
+                                                policy.occ_threshold)
+        y = fp4_matmul(a_c, w, policy)
+        if policy.occ_comp == "dense":
+            comp = jnp.matmul(delta.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                              preferred_element_type=jnp.float32)
+            y = y + comp.astype(y.dtype)
+        elif policy.occ_comp == "channel":
+            k = max(1, int(math.ceil(policy.occ_channel_frac * w.shape[0])))
+            comp = occ_mod.channel_compensation(
+                delta.astype(jnp.bfloat16), w.astype(jnp.bfloat16), k)
+            y = y + comp.astype(y.dtype)
+        elif policy.occ_comp != "none":
+            raise ValueError(policy.occ_comp)
+    else:
+        y = fp4_matmul(a, w, policy)
+
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y

@@ -1,0 +1,90 @@
+"""QuantPolicy: the single knob surface for the FP4 training recipe.
+
+A policy is a frozen (hashable) dataclass so it can be closed over by jitted
+functions as a static argument. Preset policies reproduce the paper's
+experimental arms (Fig. 6): BF16 baseline, the full FP4 recipe
+(W4A4 + DGE + OCC), direct-cast W4A4, weight-only W4A8, activation-only
+W8A4, and the tensor-wise granularity ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+_DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+    "float16": jnp.float16,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    enabled: bool = True
+    fmt: str = "e2m1"
+
+    # --- weights (paper §3.1) ---
+    w_quant: str = "dge"            # "dge" | "ste" | "none"
+    dge_k: float = 5.0
+    dge_clip: float = 3.0
+    w_axis: int | None = 0          # channel-wise (out-channel); None = tensor-wise
+
+    # --- activations (paper §3.2) ---
+    a_quant: str = "ste"            # "ste" | "none"
+    a_axis: int | None = -1         # token-wise; None = tensor-wise
+    occ: bool = True
+    occ_alpha: float = 0.99
+    occ_threshold: str = "sample"   # "exact" | "sample"
+    occ_comp: str = "dense"         # "dense" | "channel" | "none"
+    occ_channel_frac: float = 0.02  # top-k channel fraction for "channel"
+
+    # --- GeMM execution ---
+    gemm_backend: str = "bf16_sim"  # "bf16_sim" | "int8" | "pallas"
+    compute: str = "bfloat16"       # non-GeMM compute dtype
+
+    # --- scope ---
+    quantize_head: bool = False     # LM head stays high-precision by default
+
+    @property
+    def compute_dtype(self):
+        return _DTYPES[self.compute]
+
+    def replace(self, **kw) -> "QuantPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# --- preset experimental arms (paper Fig. 6) -------------------------------
+
+BF16 = QuantPolicy(enabled=False)
+FP4_PAPER = QuantPolicy()  # W4A4 + DGE + OCC, k=5, alpha=0.99, vector-wise
+W4A4_DIRECT = QuantPolicy(w_quant="ste", occ=False)          # direct cast
+W4A8 = QuantPolicy(a_quant="none", occ=False)                # weight-only 4b
+W4A8_STE = QuantPolicy(w_quant="ste", a_quant="none", occ=False)
+W8A4 = QuantPolicy(w_quant="none", occ=True)                 # act-only 4b
+W8A4_DIRECT = QuantPolicy(w_quant="none", occ=False)
+TENSOR_WISE = QuantPolicy(w_axis=None, a_axis=None)          # Fig. 6d arm
+
+PRESETS: dict[str, QuantPolicy] = {
+    "bf16": BF16,
+    "fp4": FP4_PAPER,
+    "fp4_int8": FP4_PAPER.replace(gemm_backend="int8"),
+    "fp4_pallas": FP4_PAPER.replace(gemm_backend="pallas"),
+    # beyond-paper TPU variants (§Perf hillclimb arms):
+    "fp4_channel": FP4_PAPER.replace(occ_comp="channel"),
+    "fp4_nocomp": FP4_PAPER.replace(occ_comp="none"),
+    "fp4_channel_int8": FP4_PAPER.replace(occ_comp="channel",
+                                          gemm_backend="int8"),
+    "w4a4_direct": W4A4_DIRECT,
+    "w4a8": W4A8,
+    "w4a8_ste": W4A8_STE,
+    "w8a4": W8A4,
+    "w8a4_direct": W8A4_DIRECT,
+    "tensor_wise": TENSOR_WISE,
+}
+
+
+def get_policy(name: str) -> QuantPolicy:
+    if name not in PRESETS:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(PRESETS)}")
+    return PRESETS[name]

@@ -1,0 +1,92 @@
+"""Absmax vector-wise FP4/FP8 quantization (pure-jnp reference semantics).
+
+Quantization follows the paper's Eq. (1): x_q = Q(x * gamma) with
+gamma = MAX_fmt / absmax(x). `Q` is round-to-nearest on the format grid,
+implemented with `searchsorted` over the LUT boundaries (identical to the
+paper's CUDA threshold chain, Appendix A).
+
+Granularity (paper §4.1/§4.3):
+  * activations: token-wise  -> axis=-1 reduction (one scale per row)
+  * weights:     channel-wise-> axis=0  reduction (one scale per out column)
+  * tensor-wise kept for the granularity ablation (Fig. 6d).
+
+All functions return the *scaled* quantized tensor plus the scale so callers
+can fold 1/(sa*sw) into the GeMM epilogue (the scales never enter the GeMM,
+matching Fig. 2).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import formats
+from .formats import E2M1, FP4Format
+
+_EPS = 1e-12
+
+
+def lut_round(x: jnp.ndarray, fmt: FP4Format | str = E2M1) -> jnp.ndarray:
+    """Round-to-nearest on the format grid via boundary LUT (paper App. A)."""
+    values, bounds = formats.grid(fmt)
+    idx = jnp.searchsorted(bounds, x.astype(jnp.float32), side="right")
+    return values[idx].astype(x.dtype)
+
+
+def absmax_scale(x: jnp.ndarray, axis: int | Sequence[int] | None,
+                 max_value: float) -> jnp.ndarray:
+    """gamma = MAX / absmax(x) along `axis` (None => tensor-wise).
+
+    All-zero slices get scale 1.0 (they quantize to 0 regardless); non-zero
+    slices map their absmax exactly onto the format max, however small.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=axis is not None)
+    # slices with absmax below ~1e-30 would overflow the f32 scale
+    # (6/1.2e-38 = inf); they carry no representable signal at 4 bits and
+    # quantize to zero via scale 1.
+    return max_value / jnp.where(amax > 1e-30, amax, max_value)
+
+
+def quantize(x: jnp.ndarray, axis: int | Sequence[int] | None = None,
+             fmt: FP4Format | str = E2M1):
+    """Quantize to FP4. Returns (x_q_scaled, scale).
+
+    x_q_scaled lies on the format grid (range [-MAX, MAX]); the dequantized
+    tensor is x_q_scaled / scale. `axis` selects granularity: -1 for
+    token-wise activations, 0 for channel-wise weights, None tensor-wise.
+    """
+    fmt = formats.get_format(fmt)
+    scale = absmax_scale(x, axis, fmt.max_value)
+    x_scaled = x.astype(jnp.float32) * scale
+    return lut_round(x_scaled, fmt), scale
+
+
+def dequantize(x_q: jnp.ndarray, scale: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    out = x_q.astype(jnp.float32) / scale
+    return out.astype(dtype) if dtype is not None else out
+
+
+def fake_quant(x: jnp.ndarray, axis: int | Sequence[int] | None = None,
+               fmt: FP4Format | str = E2M1) -> jnp.ndarray:
+    """quantize->dequantize in the input dtype (simulation convenience)."""
+    q, s = quantize(x, axis, fmt)
+    return dequantize(q, s, dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FP8 helpers (optimizer moments + gradient communication, after FP8-LM).
+# Uses native jnp.float8_e4m3fn storage with a per-tensor power-of-2-free
+# absmax scale.
+# ---------------------------------------------------------------------------
+
+def quantize_fp8(x: jnp.ndarray, e4m3: bool = True):
+    """Quantize to native fp8 storage. Returns (fp8_tensor, f32 scale)."""
+    maxv = formats.FP8_E4M3_MAX if e4m3 else formats.FP8_E5M2_MAX
+    dtype = jnp.float8_e4m3fn if e4m3 else jnp.float8_e5m2
+    scale = absmax_scale(x, None, maxv)
+    return (x.astype(jnp.float32) * scale).astype(dtype), scale
+
+
+def dequantize_fp8(x8: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (x8.astype(jnp.float32) / scale).astype(dtype)

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes in Python -- bit-faithful validation of the TPU program); on real
+TPU `interpret=False` compiles to Mosaic. `INTERPRET` flips automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import fp4_matmul as _mm
+from . import fp4_quant as _q
+from . import outlier as _ol
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def fp4_quantize(x: jnp.ndarray, block_m: int = 256):
+    """Token-wise E2M1 quantization: (M,K) -> (q, scale (M,1))."""
+    return _q.fp4_quant(x, block_m=block_m, interpret=INTERPRET)
+
+
+def fp4_matmul_pallas(a_q: jnp.ndarray, w_q: jnp.ndarray,
+                      sa: jnp.ndarray | None = None,
+                      sw: jnp.ndarray | None = None, **kw):
+    """Fused dequantizing GeMM. When called from core.fp4_gemm the rescale
+    is applied outside, so identity scales are used here."""
+    M, K = a_q.shape
+    N = w_q.shape[1]
+    if sa is None:
+        sa = jnp.ones((M, 1), jnp.float32)
+    if sw is None:
+        sw = jnp.ones((1, N), jnp.float32)
+    orig_shape = None
+    if a_q.ndim > 2:
+        orig_shape = a_q.shape
+        a_q = a_q.reshape(-1, K)
+    out = _mm.fp4_matmul_kernel(a_q, w_q, sa, sw, interpret=INTERPRET, **kw)
+    if orig_shape is not None:
+        out = out.reshape(*orig_shape[:-1], N)
+    return out
+
+
+def outlier_clamp(x: jnp.ndarray, lo, hi, block_m: int = 256):
+    return _ol.outlier_clamp(x, jnp.asarray(lo), jnp.asarray(hi),
+                             block_m=block_m, interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=INTERPRET)

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused outlier clamp + residual extraction (OCC §3.2).
+
+One pass over the activation tile in VMEM produces both the clamped tensor
+(FP4 GeMM input) and the sparse residual (compensation input) -- the
+unfused jnp version reads x twice from HBM. Thresholds are scalars
+(prefetched, SMEM-resident on real TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _clamp_kernel(x_ref, lo_ref, hi_ref, c_ref, r_ref):
+    x = x_ref[...]
+    lo = lo_ref[0, 0].astype(x.dtype)
+    hi = hi_ref[0, 0].astype(x.dtype)
+    c = jnp.clip(x, lo, hi)
+    c_ref[...] = c
+    r_ref[...] = x - c
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def outlier_clamp(x: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, *,
+                  block_m: int = 256, interpret: bool = True):
+    """x: (M, K); lo/hi scalar thresholds -> (clamped, residual)."""
+    M, K = x.shape
+    bm = min(block_m, M)
+    lo2 = jnp.reshape(lo.astype(jnp.float32), (1, 1))
+    hi2 = jnp.reshape(hi.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _clamp_kernel,
+        grid=(pl.cdiv(M, bm),),
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, K), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, K), x.dtype),
+                   jax.ShapeDtypeStruct((M, K), x.dtype)],
+        interpret=interpret,
+    )(x, lo2, hi2)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as q_mod
+
+
+def fp4_quant_ref(x: jnp.ndarray):
+    """Token-wise FP4 quantization. x: (M, K) -> (q on grid (M,K), scale (M,1))."""
+    return q_mod.quantize(x, axis=-1)
+
+
+def fp4_matmul_ref(a_q: jnp.ndarray, w_q: jnp.ndarray, sa: jnp.ndarray,
+                   sw: jnp.ndarray) -> jnp.ndarray:
+    """Dequantizing GeMM: (a_q @ w_q) / (sa x sw) in f32."""
+    acc = jnp.matmul(a_q.astype(jnp.float32), w_q.astype(jnp.float32))
+    return acc / sa / sw
+
+
+def outlier_clamp_ref(x: jnp.ndarray, lo: float, hi: float):
+    """Fused clamp + residual. Returns (clamped, residual)."""
+    c = jnp.clip(x, lo, hi)
+    return c, x - c
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q,k,v: (B, S, H, D) -> (B, S, H, D), f32 softmax."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512"
+                           " --xla_llvm_disable_expensive_passes=true")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), record memory/cost/collective
+analysis + analytic roofline terms as a JSON artifact.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first init. Smoke tests and benchmarks never import this
+module (they see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen1.5-32b --shape train_4k --mesh single \
+        --out artifacts/dryrun [--policy fp4] [--hier]
+"""
+import argparse
+import dataclasses
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import flops as flops_mod
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import roofline as roof_mod
+from repro.configs import SHAPES, get_config
+from repro.core.policy import get_policy
+from repro.dist import sharding as shard_rules
+from repro.launch import inputs as inputs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import adam as adam_mod
+from repro.train import train_step as ts_mod
+
+
+def _tune_config(cfg, shape):
+    """Per-shape execution knobs (documented in DESIGN.md §6)."""
+    cfg = cfg.replace(scan_layers=True)  # compile O(group), not O(L)
+    if shape.kind == "train":
+        # dense attention at 4K: exact FLOP counting, scores fit with remat
+        cfg = cfg.replace(attn_chunk=max(cfg.attn_chunk, shape.seq_len))
+    else:
+        cfg = cfg.replace(attn_chunk=1024)
+    if shape.kind == "decode":
+        # production decode cells use fp8 KV cache (DESIGN.md §4)
+        cfg = cfg.replace(cache_dtype="float8_e4m3fn")
+    return cfg
+
+
+def _eval_shape_with_axes(fn, *args):
+    """eval_shape capturing the static logical-axes side channel."""
+    box = {}
+
+    def wrapper(*a):
+        out, axes = fn(*a)
+        box["axes"] = axes
+        return out
+
+    struct = jax.eval_shape(wrapper, *args)
+    return struct, box["axes"]
+
+
+def _batch_shardings(batch_struct, mesh):
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b_ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def one(x):
+        b = b_ax if x.shape[0] % dp == 0 else None
+        return NamedSharding(mesh, P(b, *([None] * (x.ndim - 1))))
+
+    return jax.tree.map(one, batch_struct)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, policy_name: str,
+             hier: bool = False, seq_parallel: bool = True,
+             out_dir: str | None = None, save_hlo: bool = False,
+             microbatch: int = 0, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    shape = SHAPES[shape_name]
+    cfg = _tune_config(get_config(arch), shape)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if shape_name not in cfg.applicable_shapes():
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": True,
+                "reason": "long_500k skipped for pure full-attention arch "
+                          "(DESIGN.md §5)"}
+    policy = get_policy(policy_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    model = build_model(cfg, policy,
+                        shard_rules.make_act_constraint(
+                            mesh, seq_parallel=seq_parallel))
+
+    if shape.kind == "train" and not microbatch:
+        # default microbatching: keep local activation footprint in check
+        # (2 local sequences per microbatch; DESIGN.md §4)
+        dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        local_b = max(1, shape.global_batch // dp)
+        microbatch = max(1, min(8, local_b // 2))
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            lowered, mode = _lower_train(model, cfg, shape, mesh, hier,
+                                         microbatch), "train"
+        elif shape.kind == "prefill":
+            lowered, mode = _lower_prefill(model, cfg, shape, mesh), "prefill"
+        else:
+            lowered, mode = _lower_decode(model, cfg, shape, mesh), "decode"
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    colls = hlo_mod.collective_bytes(hlo_text)
+
+    analytic = flops_mod.model_flops(cfg, shape, mode)
+    inner_corr = sum(s.correction for s in analytic["scan_corrections"])
+    # layer-stack scan correction: the while body holds one group of layers;
+    # add the other (n_groups-1) groups analytically (DESIGN.md §6).
+    n_groups = getattr(model, "n_groups", 0)
+    if cfg.enc_layers and getattr(model, "stacked", False):
+        n_groups = min(cfg.enc_layers, cfg.n_layers)
+    if n_groups >= 2:
+        mult = 4.0 if mode == "train" else 1.0   # fwd + remat + 2x bwd
+        stack_corr = analytic["layers_fwd_flops"] * (1 - 1 / n_groups) * mult
+        inner_corr = inner_corr / n_groups       # inner scans: counted body only
+    else:
+        stack_corr = 0.0
+    corrections = inner_corr + stack_corr
+    hlo_flops_dev = float(ca.get("flops", 0.0))
+    corrected_dev = hlo_flops_dev + corrections / n_chips
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    wire_dev = colls["total_wire_bytes"]
+    fp4_frac = (analytic["fp4_gemm_flops"] / analytic["model_flops"]
+                if analytic["model_flops"] else 0.0)
+
+    roof = roof_mod.roofline_terms(
+        hlo_flops_per_dev=hlo_flops_dev,
+        corrected_flops_per_dev=corrected_dev,
+        hbm_bytes_per_dev=bytes_dev,
+        wire_bytes_per_dev=wire_dev,
+        fp4_fraction=fp4_frac)
+
+    model_flops_dev = analytic["model_flops"] / n_chips
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
+        "policy": policy_name, "hier": hier, "skipped": False,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {
+            "flops_per_dev": hlo_flops_dev,
+            "bytes_accessed_per_dev": bytes_dev,
+            "transcendentals_per_dev": float(ca.get("transcendentals", 0.0)),
+        },
+        "memory_analysis": {
+            "argument_bytes_per_dev": ma.argument_size_in_bytes,
+            "output_bytes_per_dev": ma.output_size_in_bytes,
+            "temp_bytes_per_dev": ma.temp_size_in_bytes,
+            "alias_bytes_per_dev": ma.alias_size_in_bytes,
+            "peak_estimate_gb": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                 ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9, 3),
+        },
+        "collectives": colls,
+        "analytic": {
+            "model_flops_global": analytic["model_flops"],
+            "fp4_gemm_flops_global": analytic["fp4_gemm_flops"],
+            "fp4_fraction": fp4_frac,
+            "n_layer_groups": n_groups,
+            "stack_correction_global": stack_corr,
+            "scan_corrections_global": corrections,
+            "scan_detail": [dataclasses.asdict(s) | {"correction": s.correction}
+                            for s in analytic["scan_corrections"]],
+            "tokens": analytic["tokens"],
+        },
+        "flops": {
+            "hlo_per_dev": hlo_flops_dev,
+            "corrected_per_dev": corrected_dev,
+            "model_per_dev": model_flops_dev,
+            "useful_ratio": (model_flops_dev / corrected_dev
+                             if corrected_dev else 0.0),
+        },
+        "roofline": roof.as_dict(),
+        "mfu_bound": roof_mod.mfu(model_flops_dev, roof.step_time_s),
+        "hw_util_bound": roof_mod.hw_utilization(
+            corrected_dev, roof.step_time_s, fp4_frac),
+    }
+    result["tag"] = tag
+    result["overrides"] = overrides or {}
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}"
+                            + (f"__{policy_name}" if policy_name != "fp4" else "")
+                            + (f"__{tag}" if tag else "")
+                            + ("__hier" if hier else "") + ".json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        if save_hlo:
+            with open(path.replace(".json", ".hlo.txt"), "w") as f:
+                f.write(hlo_text)
+    return result
+
+
+def _lower_train(model, cfg, shape, mesh, hier, microbatch=1):
+    adam_cfg = adam_mod.AdamConfig()
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    state_struct, axes = _eval_shape_with_axes(
+        lambda k: _init_state_with_axes(model, adam_cfg, k), key_struct)
+    shardings = ts_mod.state_shardings(state_struct, axes, mesh)
+    batch = inputs_mod.batch_struct(cfg, shape.seq_len, shape.global_batch)
+    bshard = _batch_shardings(batch, mesh)
+    if hier and "pod" in mesh.axis_names:
+        step = ts_mod.make_hier_train_step(model, mesh)
+    else:
+        step = ts_mod.make_train_step(model, mesh, microbatch=microbatch)
+    fn = jax.jit(step, in_shardings=(shardings, bshard), donate_argnums=0)
+    return fn.lower(state_struct, batch)
+
+
+def _init_state_with_axes(model, adam_cfg, key):
+    state, axes = ts_mod.init_state(model, adam_cfg, key)
+    return state, axes
+
+
+def _bf16_params(struct):
+    """Serving params are bf16 (checkpoint export precision)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s, struct)
+
+
+def _lower_prefill(model, cfg, shape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_struct, axes = _eval_shape_with_axes(
+        lambda k: model.init(k), key_struct)
+    params_struct = _bf16_params(params_struct)
+    pshard = shard_rules.param_shardings(axes, params_struct, mesh)
+    batch = inputs_mod.batch_struct(cfg, S, B)
+    bshard = _batch_shardings(batch, mesh)
+    if cfg.enc_layers:
+        cache_struct = jax.eval_shape(
+            partial(model.init_cache, B, S // 2, memory_len=S // 2))
+    else:
+        cache_struct = jax.eval_shape(partial(model.init_cache, B, S))
+    cshard = shard_rules.cache_shardings(cache_struct, mesh)
+    fn = jax.jit(model.prefill,
+                 in_shardings=(pshard, bshard, cshard),
+                 donate_argnums=2)
+    return fn.lower(params_struct, batch, cache_struct)
+
+
+def _lower_decode(model, cfg, shape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_struct, axes = _eval_shape_with_axes(
+        lambda k: model.init(k), key_struct)
+    params_struct = _bf16_params(params_struct)
+    pshard = shard_rules.param_shardings(axes, params_struct, mesh)
+    if cfg.enc_layers:
+        cache_struct = jax.eval_shape(
+            partial(model.init_cache, B, S, memory_len=S // 2))
+    else:
+        cache_struct = jax.eval_shape(partial(model.init_cache, B, S))
+    cshard = shard_rules.cache_shardings(cache_struct, mesh)
+    tok_struct, pos_struct = inputs_mod.decode_struct(cfg, B)
+    tshard = _batch_shardings({"t": tok_struct}, mesh)["t"]
+    posshard = NamedSharding(mesh, P())
+    fn = jax.jit(model.decode_step,
+                 in_shardings=(pshard, cshard, tshard, posshard),
+                 donate_argnums=1)
+    return fn.lower(params_struct, cache_struct, tok_struct,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--policy", default="fp4")
+    ap.add_argument("--hier", action="store_true",
+                    help="multi-pod hierarchical fp8 grad-comm train step")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--override", nargs="*", default=[],
+                    help="config overrides k=v (int/bool/str inferred)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        if v in ("true", "false"):
+            overrides[k] = v == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                overrides[k] = v
+
+    res = run_cell(args.arch, args.shape, args.mesh, args.policy,
+                   hier=args.hier, seq_parallel=not args.no_seq_parallel,
+                   out_dir=args.out, save_hlo=args.save_hlo,
+                   overrides=overrides, tag=args.tag)
+    if res.get("skipped"):
+        print(f"SKIP {args.arch} {args.shape} {args.mesh}: {res['reason']}")
+        return
+    print(json.dumps({k: res[k] for k in
+                      ("arch", "shape", "mesh", "compile_s", "roofline",
+                       "mfu_bound")}, indent=1))
+    ma = res["memory_analysis"]
+    print(f"memory/device: args {ma['argument_bytes_per_dev']/1e9:.2f} GB, "
+          f"temps {ma['temp_bytes_per_dev']/1e9:.2f} GB, "
+          f"peak~{ma['peak_estimate_gb']:.2f} GB")
+    print(f"collectives: {res['collectives']['total_wire_bytes']/1e9:.3f} GB/dev wire, "
+          f"{res['collectives']['count']} ops")
+    print(f"flops/dev: hlo {res['flops']['hlo_per_dev']:.3e} "
+          f"corrected {res['flops']['corrected_per_dev']:.3e} "
+          f"model {res['flops']['model_per_dev']:.3e} "
+          f"useful_ratio {res['flops']['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

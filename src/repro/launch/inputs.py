@@ -1,0 +1,69 @@
+"""Batch layouts per architecture family: concrete batches (tests/training)
+and ShapeDtypeStruct stand-ins (dry-run lowering, no allocation).
+
+Family layouts:
+  tokens      -> {"tokens": (B, S) i32}
+  embeddings  -> {"embeds": (B, S, D) bf16, "labels": (B, S) i32}   (vlm/audio
+                 frontends are stubs per the assignment)
+  encdec      -> {"enc_embeds": (B, S/2, D) bf16, "tokens": (B, S/2) i32}
+                 (seq_len counts total positions across enc+dec, DESIGN §9)
+
+Decode-step inputs: tokens (B, 1) i32 (embeds (B,1,D) pre-prefill for stub
+frontends decode text tokens), position scalar i32, plus the KV cache pytree
+built by the model's init_cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def _is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.enc_layers > 0
+
+
+def batch_struct(cfg: ArchConfig, seq_len: int, batch: int):
+    """ShapeDtypeStructs for one training/prefill batch."""
+    bf16 = jnp.bfloat16
+    if _is_encdec(cfg):
+        half = seq_len // 2
+        return {
+            "enc_embeds": jax.ShapeDtypeStruct((batch, half, cfg.d_model), bf16),
+            "tokens": jax.ShapeDtypeStruct((batch, half), jnp.int32),
+        }
+    if cfg.frontend == "embeddings":
+        return {
+            "embeds": jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model), bf16),
+            "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+
+
+def decode_struct(cfg: ArchConfig, batch: int):
+    return (jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def make_batch(cfg: ArchConfig, seq_len: int, batch: int, seed: int = 0):
+    """Concrete random batch matching batch_struct."""
+    rng = np.random.default_rng(seed)
+    if _is_encdec(cfg):
+        half = seq_len // 2
+        return {
+            "enc_embeds": jnp.asarray(
+                rng.normal(size=(batch, half, cfg.d_model)), jnp.bfloat16),
+            "tokens": jnp.asarray(
+                rng.integers(1, cfg.vocab_size, (batch, half)), jnp.int32),
+        }
+    if cfg.frontend == "embeddings":
+        return {
+            "embeds": jnp.asarray(
+                rng.normal(size=(batch, seq_len, cfg.d_model)), jnp.bfloat16),
+            "labels": jnp.asarray(
+                rng.integers(1, cfg.vocab_size, (batch, seq_len)), jnp.int32),
+        }
+    return {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (batch, seq_len)), jnp.int32)}

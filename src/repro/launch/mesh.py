@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before importing jax.
+
+Single pod:  (data=16, model=16)            = 256 chips (one v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips; `pod` is the outer
+             data-parallel axis crossing the inter-pod (DCI) links -- the
+             hop where fp8 gradient compression applies (dist/grad_comm.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests use small fake-device meshes)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """All batch-parallel axes present in the mesh ('pod' is outer DP)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

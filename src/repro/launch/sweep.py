@@ -1,0 +1,93 @@
+"""Dry-run sweep driver: every (assigned arch x applicable shape x mesh)
+cell as a subprocess (each cell needs a fresh jax with 512 fake devices),
+writing JSON artifacts consumed by the roofline report.
+
+Single-core host: cells run serially; `--resume` skips cells whose artifact
+already exists, so the sweep is restartable.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out artifacts/dryrun \
+        [--mesh single multi] [--archs a b c] [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+
+
+def cells(archs, meshes, shapes=None):
+    shapes = shapes or ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            for mesh in meshes:
+                yield arch, shape, mesh, shape in cfg.applicable_shapes()
+
+
+def artifact_path(out, arch, shape, mesh):
+    return os.path.join(out, f"{arch}__{shape}__{mesh}.json")
+
+
+def run_one(arch, shape, mesh, out, timeout=3600):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", out]
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                          env=env, cwd=os.path.dirname(os.path.dirname(
+                              os.path.dirname(os.path.dirname(__file__)))))
+    dt = time.time() - t0
+    ok = proc.returncode == 0
+    return ok, dt, (proc.stdout + proc.stderr)[-2000:]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"])
+    ap.add_argument("--shapes", nargs="+", default=None)
+    ap.add_argument("--archs", nargs="+", default=ASSIGNED_ARCHS)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    log_path = os.path.join(args.out, "sweep_log.jsonl")
+    results = []
+    for arch, shape, mesh, applicable in cells(args.archs, args.mesh,
+                                               args.shapes):
+        path = artifact_path(args.out, arch, shape, mesh)
+        if not applicable:
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "skipped": True,
+                           "reason": "long_500k skipped for pure "
+                                     "full-attention arch (DESIGN.md §5)"}, f)
+            print(f"SKIP  {arch:24s} {shape:12s} {mesh}")
+            continue
+        if args.resume and os.path.exists(path):
+            print(f"HAVE  {arch:24s} {shape:12s} {mesh}")
+            continue
+        ok, dt, tail = run_one(arch, shape, mesh, args.out, args.timeout)
+        status = "OK " if ok else "FAIL"
+        print(f"{status}  {arch:24s} {shape:12s} {mesh}  {dt:6.1f}s",
+              flush=True)
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "ok": ok,
+               "wall_s": dt}
+        if not ok:
+            rec["tail"] = tail
+        results.append(rec)
+        with open(log_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    n_fail = sum(1 for r in results if not r.get("ok", True))
+    print(f"done: {len(results)} ran, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

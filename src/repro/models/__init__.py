@@ -1,0 +1,18 @@
+"""Model zoo: a single CausalLM assembly + WhisperLM enc-dec, covering the
+10 assigned architecture families. `build_model` is the factory used by the
+launcher, smoke tests, and the dry-run."""
+from __future__ import annotations
+
+from repro.core.policy import QuantPolicy
+
+from .encdec import WhisperLM
+from .transformer import CausalLM
+
+
+def build_model(cfg, policy: QuantPolicy, act_constraint=None):
+    if cfg.family == "encdec" or cfg.enc_layers > 0:
+        return WhisperLM(cfg, policy, act_constraint)
+    return CausalLM(cfg, policy, act_constraint)
+
+
+__all__ = ["CausalLM", "WhisperLM", "build_model"]

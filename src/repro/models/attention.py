@@ -1,0 +1,188 @@
+"""Attention primitives: GQA with causal/sliding-window masking, softcap,
+online-softmax KV chunking (for 32K prefill memory), and position-based
+masking that unifies training, prefill, and ring-buffer decode caches.
+
+All score/softmax math is f32 (non-GeMM ops stay high precision, paper §4.1).
+The projection GeMMs live in blocks.py and go through fp4_linear.
+
+Positions may be 1D (S,) when they are batch-uniform (training/prefill with
+contiguous sequences): the mask is then a single (Sq, Skv) *boolean* shared
+across the batch -- materializing a per-batch f32 bias at 4K+ costs ~1 GB
+per layer and dominated the memory profile before this change.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_ok(q_pos, kv_pos, causal: bool, window: int | None):
+    """Boolean keep-mask from absolute positions. Shapes: (Sq,Skv) when both
+    positions are 1D, else (B,Sq,Skv). kv slots with position < 0 are
+    invalid (empty cache slots)."""
+    if q_pos.ndim == 1 and kv_pos.ndim == 1:
+        qp = q_pos[:, None].astype(jnp.int32)
+        kp = kv_pos[None, :].astype(jnp.int32)
+    else:
+        if q_pos.ndim == 1:
+            q_pos = q_pos[None]
+        if kv_pos.ndim == 1:
+            kv_pos = kv_pos[None]
+        qp = q_pos[:, :, None].astype(jnp.int32)
+        kp = kv_pos[:, None, :].astype(jnp.int32)
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    return ok
+
+
+def _apply_mask(s, ok):
+    """s: (B,Hkv,G,Sq,Skv); ok: (Sq,Skv) or (B,Sq,Skv) bool."""
+    if ok.ndim == 2:
+        ok = ok[None, None, None]
+    else:
+        ok = ok[:, None, None]
+    return jnp.where(ok, s, NEG_INF)
+
+
+def _scores(q, k, scale, cap):
+    """q: (B,Sq,Hkv,G,Dh), k: (B,Skv,Hkv,Dh) -> (B,Hkv,G,Sq,Skv) f32."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def dense_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                    softcap=None):
+    """Full-materialization path. q: (B,Sq,H,Dh); k,v: (B,Skv,Hkv,Dh)."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    s = _scores(qg, k, 1.0 / jnp.sqrt(Dh).astype(jnp.float32), softcap)
+    s = _apply_mask(s, _mask_ok(q_pos, kv_pos, causal, window))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                      softcap=None, kv_chunk=1024):
+    """Online-softmax scan over KV chunks: O(Sq * kv_chunk) live memory.
+
+    Scan inventory (for roofline correction): trip_count = Skv/kv_chunk,
+    body FLOPs ~= 4 * B * H * Sq * kv_chunk * Dh.
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    if Skv % kv_chunk:
+        pad = kv_chunk - Skv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pad_spec = ((0, pad),) if kv_pos.ndim == 1 else ((0, 0), (0, pad))
+        kv_pos = jnp.pad(kv_pos, pad_spec, constant_values=-1)
+        Skv += pad
+    n = Skv // kv_chunk
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+
+    ks = k.reshape(B, n, kv_chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n, kv_chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    if kv_pos.ndim == 1:
+        ps = kv_pos.reshape(n, kv_chunk)
+    else:
+        ps = kv_pos.reshape(B, n, kv_chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc = inp
+        s = _scores(qg, kc, scale, softcap)                     # (B,Hkv,G,Sq,c)
+        s = _apply_mask(s, _mask_ok(q_pos, pc, causal, window))
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, Dh), v.dtype)
+    # remat: don't save per-chunk score/probability tiles for backward
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dh)
+
+
+def sliding_window_attention(q, k, v, q_pos, kv_pos, *, window,
+                             softcap=None):
+    """Block-banded local attention for training: queries in block i attend
+    to key blocks i-1 and i (band width = window = block size). Sub-quadratic:
+    FLOPs ~ 4 * B * H * S * 2*window * Dh."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    W = window
+    if q_pos.ndim > 1:
+        q_pos = q_pos[0]
+    if kv_pos.ndim > 1:
+        kv_pos = kv_pos[0]
+    if S % W:
+        pad = W - S % W
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=-1)
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+    Sp = q.shape[1]
+    n = Sp // W
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+
+    qb = q.reshape(B, n, W, Hkv, G, Dh)
+    kb = k.reshape(B, n, W, Hkv, Dh)
+    vb = v.reshape(B, n, W, Hkv, Dh)
+    # keys for block i: blocks [i-1, i] -> (B, n, 2W, Hkv, Dh)
+    k_prev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([k_prev, kb], axis=2)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    qp = q_pos.reshape(n, W)
+    kp = kv_pos.reshape(n, W)
+    kp_prev = jnp.pad(kp, ((1, 0), (0, 0)), constant_values=-1)[:-1]
+    kp2 = jnp.concatenate([kp_prev, kp], axis=1)                # (n,2W)
+
+    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qb, k2,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = (kp2[:, None, :] >= 0) & (kp2[:, None, :] <= qp[..., None]) & \
+         (kp2[:, None, :] > qp[..., None] - W)                  # (n,Sq_w,2W)
+    s = jnp.where(ok[None, :, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p.astype(v2.dtype), v2)
+    return out.reshape(B, Sp, H, Dh)[:, :S]
+
+
+def attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+              softcap=None, kv_chunk: int | None = None):
+    """Dispatcher. Chooses the sub-quadratic/banded path for training with a
+    window, the chunked path for long KV, dense otherwise."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if window is not None and Sq == Skv and Sq > window:
+        return sliding_window_attention(q, k, v, q_pos, kv_pos, window=window,
+                                        softcap=softcap)
+    if kv_chunk is not None and Skv > 2 * kv_chunk and Sq > 1:
+        return chunked_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                                 window=window, softcap=softcap,
+                                 kv_chunk=kv_chunk)
+    return dense_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                           window=window, softcap=softcap)

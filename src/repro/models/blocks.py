@@ -1,0 +1,331 @@
+"""Transformer blocks: attention sublayer (GQA variants), dense FFN, MoE FFN.
+
+Every GeMM goes through `fp4_linear` (the paper's contribution); norms,
+rope, softmax, router and residual math stay high-precision per §4.1.
+
+Block interface (used by transformer.py):
+    init_layer(pf, cfg, layer)                     -> Boxed tree
+    layer_train(p, x, positions, cfg, layer, pol)  -> (x, aux_loss)
+    layer_decode(p, x, cache, pos, cfg, layer, pol)-> (x, cache)
+    init_layer_cache(cfg, layer, batch, max_len)   -> cache dict
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear import fp4_linear
+from repro.core.policy import QuantPolicy
+
+from . import attention as attn_mod
+from .layers import ACTIVATIONS, apply_rope, rms_norm
+from .param import Boxed, ParamFactory
+
+CACHE_DTYPES = {"bfloat16": jnp.bfloat16, "float8_e4m3fn": jnp.float8_e4m3fn,
+                "float32": jnp.float32}
+
+
+def _norm(p, x, cfg):
+    return rms_norm(x, p, plus_one=cfg.norm_plus_one)
+
+
+# ===========================================================================
+# Attention sublayer (GQA + biases + qk-norm + softcap + local/global)
+# ===========================================================================
+
+def init_attn(pf: ParamFactory, cfg, layer: dict):
+    dh = cfg.resolved_head_dim
+    p = {
+        "wq": pf.dense(cfg.d_model, cfg.n_heads * dh, ("embed", "heads")),
+        "wk": pf.dense(cfg.d_model, cfg.n_kv_heads * dh, ("embed", "kv_heads")),
+        "wv": pf.dense(cfg.d_model, cfg.n_kv_heads * dh, ("embed", "kv_heads")),
+        "wo": pf.dense(cfg.n_heads * dh, cfg.d_model, ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = pf.zeros((cfg.n_heads * dh,), ("heads",))
+        p["bk"] = pf.zeros((cfg.n_kv_heads * dh,), ("kv_heads",))
+        p["bv"] = pf.zeros((cfg.n_kv_heads * dh,), ("kv_heads",))
+    if cfg.qk_norm:
+        p["q_norm"] = pf.ones((dh,), (None,))
+        p["k_norm"] = pf.ones((dh,), (None,))
+    return p
+
+
+def _qkv(p, x, cfg, layer, policy, positions):
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = fp4_linear(x, p["wq"], p.get("bq"), policy=policy)
+    k = fp4_linear(x, p["wk"], p.get("bk"), policy=policy)
+    v = fp4_linear(x, p["wv"], p.get("bv"), policy=policy)
+    q = q.reshape(B, S, cfg.n_heads, dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    theta = layer.get("rope_theta", cfg.rope_theta)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_train(p, x, positions, cfg, layer, policy: QuantPolicy):
+    q, k, v = _qkv(p, x, cfg, layer, policy, positions)
+    out = attn_mod.attention(
+        q, k, v, positions, positions, causal=layer.get("causal", True),
+        window=layer.get("window"), softcap=cfg.attn_softcap,
+        kv_chunk=cfg.attn_chunk)
+    out = out.reshape(*x.shape[:2], -1)
+    return fp4_linear(out, p["wo"], policy=policy)
+
+
+def init_attn_cache(cfg, layer, batch: int, max_len: int):
+    dh = cfg.resolved_head_dim
+    window = layer.get("window")
+    cap = min(window, max_len) if window else max_len
+    dt = CACHE_DTYPES[cfg.cache_dtype]
+    return {
+        "k": jnp.zeros((batch, cap, cfg.n_kv_heads, dh), dt),
+        "v": jnp.zeros((batch, cap, cfg.n_kv_heads, dh), dt),
+        "kv_pos": jnp.full((batch, cap), -1, jnp.int32),
+    }
+
+
+def _ring_write(cache, k, v, positions):
+    """Write (k, v, positions) for a full prefix into a ring-buffer cache.
+    k/v: (B, S, Hkv, Dh); positions: (S,) or (B, S). Keeps the last `cap`
+    positions."""
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (k.shape[0],
+                                                       positions.shape[0]))
+    B, S = positions.shape
+    cap = cache["k"].shape[1]
+    take = min(S, cap)
+    slots = jnp.arange(S - take, S, dtype=jnp.int32) % cap
+    ck = cache["k"].at[:, slots].set(k[:, S - take:].astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(v[:, S - take:].astype(cache["v"].dtype))
+    cpos = cache["kv_pos"].at[:, slots].set(positions[:, S - take:])
+    return {"k": ck, "v": cv, "kv_pos": cpos}
+
+
+def attn_prefill(p, x, positions, cache, cfg, layer, policy: QuantPolicy):
+    """Parallel prompt processing + cache fill."""
+    q, k, v = _qkv(p, x, cfg, layer, policy, positions)
+    out = attn_mod.attention(
+        q, k, v, positions, positions, causal=layer.get("causal", True),
+        window=layer.get("window"), softcap=cfg.attn_softcap,
+        kv_chunk=cfg.attn_chunk)
+    out = out.reshape(*x.shape[:2], -1)
+    y = fp4_linear(out, p["wo"], policy=policy)
+    return y, _ring_write(cache, k, v, positions)
+
+
+def attn_decode(p, x, cache, pos, cfg, layer, policy: QuantPolicy):
+    """x: (B,1,D); pos: scalar int32 current position; ring-buffer write."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, layer, policy, positions)
+    cap = cache["k"].shape[1]
+    idx = pos % cap
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, idx, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["kv_pos"], positions, (0, idx))
+    out = attn_mod.dense_attention(
+        q, ck.astype(q.dtype), cv.astype(q.dtype), positions, cpos,
+        causal=True, window=layer.get("window"), softcap=cfg.attn_softcap)
+    out = out.reshape(B, 1, -1)
+    y = fp4_linear(out, p["wo"], policy=policy)
+    return y, {"k": ck, "v": cv, "kv_pos": cpos}
+
+
+# ===========================================================================
+# Dense FFN (SwiGLU / GeGLU / plain MLP)
+# ===========================================================================
+
+def init_ffn(pf: ParamFactory, cfg, d_ff: int | None = None, glu: bool = True):
+    d_ff = d_ff or cfg.d_ff
+    p = {"wd": pf.dense(d_ff, cfg.d_model, ("mlp", "embed"))}
+    if glu:
+        p["wg"] = pf.dense(cfg.d_model, d_ff, ("embed", "mlp"))
+        p["wu"] = pf.dense(cfg.d_model, d_ff, ("embed", "mlp"))
+    else:
+        p["wu"] = pf.dense(cfg.d_model, d_ff, ("embed", "mlp"))
+    return p
+
+
+def ffn_apply(p, x, cfg, policy: QuantPolicy):
+    act = ACTIVATIONS[cfg.act]
+    if "wg" in p:
+        h = act(fp4_linear(x, p["wg"], policy=policy)) * \
+            fp4_linear(x, p["wu"], policy=policy)
+    else:
+        h = act(fp4_linear(x, p["wu"], policy=policy))
+    return fp4_linear(h, p["wd"], policy=policy)
+
+
+# ===========================================================================
+# MoE FFN: top-k router (bf16) + capacity-factor gather dispatch + FP4
+# expert GeMMs, experts sharded over 'expert' (-> mesh 'model').
+# ===========================================================================
+
+def init_moe(pf: ParamFactory, cfg):
+    E, F = cfg.n_experts, cfg.moe_d_ff
+    return {
+        "router": pf.dense(cfg.d_model, E, ("embed", None), scale=0.02),
+        "wg": pf.stacked_dense(E, cfg.d_model, F, ("expert", "embed", "mlp")),
+        "wu": pf.stacked_dense(E, cfg.d_model, F, ("expert", "embed", "mlp")),
+        "wd": pf.stacked_dense(E, F, cfg.d_model, ("expert", "mlp", "embed")),
+    }
+
+
+def moe_capacity(n_tokens: int, cfg) -> int:
+    cap = int(np.ceil(cfg.top_k * n_tokens * cfg.capacity_factor / cfg.n_experts))
+    # round to MXU-friendly multiple
+    return max(8, int(np.ceil(cap / 8)) * 8)
+
+
+def moe_apply(p, x, cfg, policy: QuantPolicy):
+    """x: (B,S,D) -> (y, aux_loss). Gather-based capacity dispatch:
+    tokens are ranked within their expert via a stable argsort; overflow
+    beyond capacity C is dropped (standard Switch semantics)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(T, cfg)
+    xf = x.reshape(T, D)
+
+    logits = jnp.matmul(xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))          # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                          # (T,K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(topi, E, dtype=jnp.float32).sum(1)), axis=0) / K
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = topi.reshape(-1)                                     # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(E))             # (E,)
+    rank_sorted = jnp.arange(T * K) - first[sorted_e]
+    rank = jnp.zeros(T * K, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)              # overflow row
+
+    tok_of = jnp.arange(T * K) // K
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(xf[tok_of])
+    buf = buf[:-1].reshape(E, C, D)
+
+    def expert_ffn(xb, wg, wu, wd):
+        act = ACTIVATIONS[cfg.act]
+        h = act(fp4_linear(xb, wg, policy=policy)) * \
+            fp4_linear(xb, wu, policy=policy)
+        return fp4_linear(h, wd, policy=policy)
+
+    out_buf = jax.vmap(expert_ffn)(buf, p["wg"], p["wu"], p["wd"])  # (E,C,D)
+    out_flat = out_buf.reshape(E * C, D)
+    gathered = jnp.where(keep[:, None], out_flat[jnp.minimum(slot, E * C - 1)], 0.0)
+    y = (gathered.reshape(T, K, D) * topv[..., None].astype(x.dtype)).sum(1)
+    return y.reshape(B, S, D), aux
+
+
+# ===========================================================================
+# Full attention+FFN layer (the "attn" plan kind)
+# ===========================================================================
+
+def init_layer(pf: ParamFactory, cfg, layer: dict):
+    p = {"ln_attn": pf.ones((cfg.d_model,), (None,)),
+         "ln_ffn": pf.ones((cfg.d_model,), (None,))}
+    if cfg.use_mla:
+        from . import mla
+        p["attn"] = mla.init_mla(pf, cfg)
+    else:
+        p["attn"] = init_attn(pf, cfg, layer)
+    if layer.get("ffn") == "moe":
+        p["ffn"] = init_moe(pf, cfg)
+    else:
+        p["ffn"] = init_ffn(pf, cfg, glu=cfg.act != "gelu_mlp")
+    if cfg.norm_plus_one:  # gemma sandwich norms start at 0 offset (=1 mult)
+        p["ln_attn"] = pf.zeros((cfg.d_model,), (None,))
+        p["ln_ffn"] = pf.zeros((cfg.d_model,), (None,))
+    if getattr(cfg, "sandwich_norm", False) or cfg.norm_plus_one:
+        mk = pf.zeros if cfg.norm_plus_one else pf.ones
+        p["ln_post_attn"] = mk((cfg.d_model,), (None,))
+        p["ln_post_ffn"] = mk((cfg.d_model,), (None,))
+    return p
+
+
+def layer_train(p, x, positions, cfg, layer: dict, policy: QuantPolicy):
+    aux = jnp.float32(0.0)
+    h = _norm(p["ln_attn"], x, cfg)
+    if cfg.use_mla:
+        from . import mla
+        a = mla.mla_train(p["attn"], h, positions, cfg, policy)
+    else:
+        a = attn_train(p["attn"], h, positions, cfg, layer, policy)
+    if "ln_post_attn" in p:
+        a = _norm(p["ln_post_attn"], a, cfg)
+    x = x + a
+    h = _norm(p["ln_ffn"], x, cfg)
+    if layer.get("ffn") == "moe":
+        f, aux = moe_apply(p["ffn"], h, cfg, policy)
+    else:
+        f = ffn_apply(p["ffn"], h, cfg, policy)
+    if "ln_post_ffn" in p:
+        f = _norm(p["ln_post_ffn"], f, cfg)
+    return x + f, aux
+
+
+def init_layer_cache(cfg, layer: dict, batch: int, max_len: int):
+    if cfg.use_mla:
+        from . import mla
+        return mla.init_mla_cache(cfg, batch, max_len)
+    return init_attn_cache(cfg, layer, batch, max_len)
+
+
+def layer_prefill(p, x, positions, cache, cfg, layer: dict,
+                  policy: QuantPolicy):
+    h = _norm(p["ln_attn"], x, cfg)
+    if cfg.use_mla:
+        from . import mla
+        a, cache = mla.mla_prefill(p["attn"], h, positions, cache, cfg, policy)
+    else:
+        a, cache = attn_prefill(p["attn"], h, positions, cache, cfg, layer,
+                                policy)
+    if "ln_post_attn" in p:
+        a = _norm(p["ln_post_attn"], a, cfg)
+    x = x + a
+    h = _norm(p["ln_ffn"], x, cfg)
+    if layer.get("ffn") == "moe":
+        f, _ = moe_apply(p["ffn"], h, cfg, policy)
+    else:
+        f = ffn_apply(p["ffn"], h, cfg, policy)
+    if "ln_post_ffn" in p:
+        f = _norm(p["ln_post_ffn"], f, cfg)
+    return x + f, cache
+
+
+def layer_decode(p, x, cache, pos, cfg, layer: dict, policy: QuantPolicy):
+    h = _norm(p["ln_attn"], x, cfg)
+    if cfg.use_mla:
+        from . import mla
+        a, cache = mla.mla_decode(p["attn"], h, cache, pos, cfg, policy)
+    else:
+        a, cache = attn_decode(p["attn"], h, cache, pos, cfg, layer, policy)
+    if "ln_post_attn" in p:
+        a = _norm(p["ln_post_attn"], a, cfg)
+    x = x + a
+    h = _norm(p["ln_ffn"], x, cfg)
+    if layer.get("ffn") == "moe":
+        f, _ = moe_apply(p["ffn"], h, cfg, policy)
+    else:
+        f = ffn_apply(p["ffn"], h, cfg, policy)
+    if "ln_post_ffn" in p:
+        f = _norm(p["ln_post_ffn"], f, cfg)
+    return x + f, cache

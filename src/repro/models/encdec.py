@@ -1,0 +1,339 @@
+"""Whisper-style encoder-decoder LM (audio frontend stubbed per assignment:
+`enc_embeds` are precomputed conv-frontend frame embeddings).
+
+Encoder: bidirectional MHA + GELU MLP, sinusoidal positions, LayerNorm.
+Decoder: causal self-attn + cross-attn + GELU MLP, learned positions.
+All GeMMs (QKV/O, cross-attn projections, MLP) run through fp4_linear.
+
+Decode cache: per-decoder-layer self-attn ring + cross-attn K/V computed
+once from the encoder memory at prefill.
+
+cfg.scan_layers stacks the homogeneous encoder and decoder layer stacks
+(see transformer.py for the accounting rationale).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear import fp4_linear
+from repro.core.policy import QuantPolicy
+
+from . import attention as attn_mod
+from . import stacking
+from .blocks import CACHE_DTYPES
+from .layers import layer_norm
+from .param import ParamFactory, split_tree
+
+
+def _sinusoid(length: int, dim: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, dim, 2) / dim)
+    emb = np.zeros((length, dim), np.float32)
+    emb[:, 0::2] = np.sin(pos * div)
+    emb[:, 1::2] = np.cos(pos * div)
+    return emb
+
+
+class WhisperLM:
+    MAX_POS = 65536  # learned decoder positions table (assignment stresses 32k)
+
+    def __init__(self, cfg, policy: QuantPolicy, act_constraint=None):
+        self.cfg = cfg
+        self.policy = policy
+        self.constrain = act_constraint or (lambda x: x)
+        self.stacked = bool(getattr(cfg, "scan_layers", False))
+
+    # ---------------------------------------------------------------- init
+    def _init_mha(self, pf):
+        d = self.cfg.d_model
+        return {
+            "wq": pf.dense(d, d, ("embed", "heads")),
+            "bq": pf.zeros((d,), ("heads",)),
+            "wk": pf.dense(d, d, ("embed", "heads")),
+            "wv": pf.dense(d, d, ("embed", "heads")),
+            "bv": pf.zeros((d,), ("heads",)),
+            "wo": pf.dense(d, d, ("heads", "embed")),
+            "bo": pf.zeros((d,), (None,)),
+        }
+
+    def _init_mlp(self, pf):
+        cfg = self.cfg
+        return {
+            "wu": pf.dense(cfg.d_model, cfg.d_ff, ("embed", "mlp")),
+            "bu": pf.zeros((cfg.d_ff,), ("mlp",)),
+            "wd": pf.dense(cfg.d_ff, cfg.d_model, ("mlp", "embed")),
+            "bd": pf.zeros((cfg.d_model,), (None,)),
+        }
+
+    def _init_ln(self, pf):
+        return {"w": pf.ones((self.cfg.d_model,), (None,)),
+                "b": pf.zeros((self.cfg.d_model,), (None,))}
+
+    def init(self, key):
+        cfg = self.cfg
+        pf = ParamFactory(key)
+        enc_layers = [{"ln1": self._init_ln(pf), "attn": self._init_mha(pf),
+                       "ln2": self._init_ln(pf), "mlp": self._init_mlp(pf)}
+                      for _ in range(cfg.enc_layers)]
+        dec_layers = [{"ln1": self._init_ln(pf), "self": self._init_mha(pf),
+                       "ln2": self._init_ln(pf), "cross": self._init_mha(pf),
+                       "ln3": self._init_ln(pf), "mlp": self._init_mlp(pf)}
+                      for _ in range(cfg.n_layers)]
+        if self.stacked:
+            enc_tree: Any = {"stack": stacking.stack_boxed_trees(enc_layers)}
+            dec_tree: Any = {"stack": stacking.stack_boxed_trees(dec_layers)}
+        else:
+            enc_tree = {"layers": enc_layers}
+            dec_tree = {"layers": dec_layers}
+        enc_tree["ln_post"] = self._init_ln(pf)
+        dec_tree["ln_f"] = self._init_ln(pf)
+        tree = {
+            "embed": pf.embedding(cfg.vocab_size, cfg.d_model),
+            "pos_dec": pf.embedding(self.MAX_POS, cfg.d_model,
+                                    axes=(None, "embed"), scale=0.01),
+            "enc": enc_tree,
+            "dec": dec_tree,
+        }
+        return split_tree(tree)
+
+    # ----------------------------------------------------------- sublayers
+    def _mha(self, p, xq, xkv, q_pos, kv_pos, causal):
+        cfg, policy = self.cfg, self.policy
+        B, Sq, _ = xq.shape
+        H = cfg.n_heads
+        dh = cfg.resolved_head_dim
+        q = fp4_linear(xq, p["wq"], p["bq"], policy=policy)
+        k = fp4_linear(xkv, p["wk"], policy=policy)
+        v = fp4_linear(xkv, p["wv"], p["bv"], policy=policy)
+        q = q.reshape(B, Sq, H, dh)
+        k = k.reshape(B, xkv.shape[1], H, dh)
+        v = v.reshape(B, xkv.shape[1], H, dh)
+        out = attn_mod.attention(q, k, v, q_pos, kv_pos, causal=causal,
+                                 kv_chunk=cfg.attn_chunk)
+        out = out.reshape(B, Sq, -1)
+        return fp4_linear(out, p["wo"], p["bo"], policy=policy), (k, v)
+
+    def _mlp(self, p, x):
+        policy = self.policy
+        h = jax.nn.gelu(fp4_linear(x, p["wu"], p["bu"], policy=policy),
+                        approximate=True)
+        return fp4_linear(h, p["wd"], p["bd"], policy=policy)
+
+    def _ln(self, p, x):
+        return layer_norm(x, p["w"], p["b"])
+
+    def _run_layers(self, tree, body, carry, extra_xs=None):
+        """Run stacked (scan) or listed (unrolled) layers. body(carry, p[,x])
+        -> (carry, y)."""
+        cfg = self.cfg
+        if self.stacked:
+            fn = jax.checkpoint(body) if cfg.remat else body
+            xs = (tree["stack"], extra_xs) if extra_xs is not None else \
+                tree["stack"]
+            return jax.lax.scan(fn, carry, xs)
+        ys = []
+        for i, p in enumerate(tree["layers"]):
+            fn = jax.checkpoint(body) if cfg.remat else body
+            x_i = (p, jax.tree.map(lambda t: t[i], extra_xs)) \
+                if extra_xs is not None else p
+            carry, y = fn(carry, x_i)
+            ys.append(y)
+        y_out = stacking.stack_trees(ys) if ys and ys[0] is not None else None
+        return carry, y_out
+
+    # -------------------------------------------------------------- encoder
+    def encode(self, params, enc_embeds):
+        cfg = self.cfg
+        B, S, _ = enc_embeds.shape
+        x = enc_embeds.astype(self.policy.compute_dtype)
+        x = x + jnp.asarray(_sinusoid(S, cfg.d_model), x.dtype)
+        pos = jnp.arange(S, dtype=jnp.int32)
+
+        def enc_layer(x, p):
+            h = self._ln(p["ln1"], x)
+            a, _ = self._mha(p["attn"], h, h, pos, pos, causal=False)
+            x = x + a
+            x = x + self._mlp(p["mlp"], self._ln(p["ln2"], x))
+            return self.constrain(x), None
+
+        x, _ = self._run_layers(params["enc"], enc_layer, x)
+        return self._ln(params["enc"]["ln_post"], x)
+
+    # -------------------------------------------------------------- decoder
+    def _dec_embed(self, params, tokens, pos0=0):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        S = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos0, S, 0)
+        return (x + pe[None]).astype(self.policy.compute_dtype)
+
+    def decode_train(self, params, tokens, memory):
+        """Parallel decoder over full token sequence against enc memory."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        Sm = memory.shape[1]
+        x = self._dec_embed(params, tokens)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        mpos = jnp.arange(Sm, dtype=jnp.int32)
+
+        def dec_layer(x, p):
+            h = self._ln(p["ln1"], x)
+            a, _ = self._mha(p["self"], h, h, pos, pos, causal=True)
+            x = x + a
+            c, _ = self._mha(p["cross"], self._ln(p["ln2"], x), memory,
+                             pos, mpos, causal=False)
+            x = x + c
+            x = x + self._mlp(p["mlp"], self._ln(p["ln3"], x))
+            return self.constrain(x), None
+
+        x, _ = self._run_layers(params["dec"], dec_layer, x)
+        return self._ln(params["dec"]["ln_f"], x)
+
+    # ------------------------------------------------------------------ api
+    def loss(self, params, batch):
+        from .layers import causal_lm_loss
+        memory = self.encode(params, batch["enc_embeds"])
+        x = self.decode_train(params, batch["tokens"], memory)
+        head_w = params["embed"].T.astype(self.policy.compute_dtype)
+        lm = causal_lm_loss(x, head_w, batch["tokens"],
+                            chunk=self.cfg.loss_chunk)
+        return lm, {"lm_loss": lm, "aux_loss": jnp.float32(0.0)}
+
+    def init_cache(self, batch_size: int, max_len: int, memory_len: int = 0):
+        cfg = self.cfg
+        dt = CACHE_DTYPES[cfg.cache_dtype]
+        dh = cfg.resolved_head_dim
+        memory_len = memory_len or max_len // 2
+        mk = lambda L: {
+            "k": jnp.zeros((batch_size, L, cfg.n_heads, dh), dt),
+            "v": jnp.zeros((batch_size, L, cfg.n_heads, dh), dt),
+            "kv_pos": jnp.full((batch_size, L), -1, jnp.int32),
+        }
+        per_layer = [{"self": mk(max_len), "cross": mk(memory_len)}
+                     for _ in range(cfg.n_layers)]
+        if self.stacked:
+            return {"stack": stacking.stack_trees(per_layer)}
+        return {"layers": per_layer}
+
+    def _dec_layer_prefill(self, p, x, c, memory, pos, mpos):
+        cfg = self.cfg
+        B, S = x.shape[:2]
+        dh = cfg.resolved_head_dim
+        h = self._ln(p["ln1"], x)
+        a, (k, v) = self._mha(p["self"], h, h, pos, pos, causal=True)
+        x = x + a
+        new_c = {"self": dict(c["self"]), "cross": dict(c["cross"])}
+        new_c["self"]["k"] = c["self"]["k"].at[:, :S].set(
+            k.astype(c["self"]["k"].dtype))
+        new_c["self"]["v"] = c["self"]["v"].at[:, :S].set(
+            v.astype(c["self"]["v"].dtype))
+        new_c["self"]["kv_pos"] = c["self"]["kv_pos"].at[:, :S].set(pos[None])
+        cc, (mk_, mv_) = self._mha(p["cross"], self._ln(p["ln2"], x), memory,
+                                   pos, mpos, causal=False)
+        x = x + cc
+        Sm = memory.shape[1]
+        new_c["cross"]["k"] = c["cross"]["k"].at[:, :Sm].set(
+            mk_.astype(c["cross"]["k"].dtype))
+        new_c["cross"]["v"] = c["cross"]["v"].at[:, :Sm].set(
+            mv_.astype(c["cross"]["v"].dtype))
+        new_c["cross"]["kv_pos"] = c["cross"]["kv_pos"].at[:, :Sm].set(
+            mpos[None])
+        x = x + self._mlp(p["mlp"], self._ln(p["ln3"], x))
+        return self.constrain(x), new_c
+
+    def prefill(self, params, batch, cache):
+        """Encode audio memory, fill cross caches, run decoder prompt."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["enc_embeds"])
+        B, Sm = memory.shape[:2]
+        mpos = jnp.arange(Sm, dtype=jnp.int32)
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        x = self._dec_embed(params, tokens)
+        pos = jnp.arange(S, dtype=jnp.int32)
+
+        def body(x, inp):
+            p, c = inp
+            return self._dec_layer_prefill(p, x, c, memory, pos, mpos)
+
+        if self.stacked:
+            fn = jax.checkpoint(body) if cfg.remat else body
+            x, new_stack = jax.lax.scan(fn, x, (params["dec"]["stack"],
+                                                cache["stack"]))
+            new_cache = {"stack": new_stack}
+        else:
+            new_layers = []
+            for p, c in zip(params["dec"]["layers"], cache["layers"]):
+                x, nc = body(x, (p, c))
+                new_layers.append(nc)
+            new_cache = {"layers": new_layers}
+        x = self._ln(params["dec"]["ln_f"], x)
+        logits = jnp.matmul(x[:, -1], params["embed"].T.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, new_cache
+
+    def _dec_layer_step(self, p, x, c, pos, positions):
+        cfg, policy = self.cfg, self.policy
+        B = x.shape[0]
+        dh = cfg.resolved_head_dim
+        h = self._ln(p["ln1"], x)
+        q = fp4_linear(h, p["self"]["wq"], p["self"]["bq"], policy=policy)
+        k = fp4_linear(h, p["self"]["wk"], policy=policy)
+        v = fp4_linear(h, p["self"]["wv"], p["self"]["bv"], policy=policy)
+        q = q.reshape(B, 1, cfg.n_heads, dh)
+        k = k.reshape(B, 1, cfg.n_heads, dh)
+        v = v.reshape(B, 1, cfg.n_heads, dh)
+        cs = c["self"]
+        ck = jax.lax.dynamic_update_slice(cs["k"], k.astype(cs["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cs["v"], v.astype(cs["v"].dtype),
+                                          (0, pos, 0, 0))
+        cp = jax.lax.dynamic_update_slice(cs["kv_pos"], positions, (0, pos))
+        out = attn_mod.dense_attention(q, ck.astype(q.dtype),
+                                       cv.astype(q.dtype), positions, cp,
+                                       causal=True)
+        x = x + fp4_linear(out.reshape(B, 1, -1), p["self"]["wo"],
+                           p["self"]["bo"], policy=policy)
+        h = self._ln(p["ln2"], x)
+        qc = fp4_linear(h, p["cross"]["wq"], p["cross"]["bq"],
+                        policy=policy).reshape(B, 1, cfg.n_heads, dh)
+        mc = c["cross"]
+        out = attn_mod.dense_attention(
+            qc, mc["k"].astype(qc.dtype), mc["v"].astype(qc.dtype),
+            positions, mc["kv_pos"], causal=False)
+        x = x + fp4_linear(out.reshape(B, 1, -1), p["cross"]["wo"],
+                           p["cross"]["bo"], policy=policy)
+        x = x + self._mlp(p["mlp"], self._ln(p["ln3"], x))
+        new_c = {"self": {"k": ck, "v": cv, "kv_pos": cp}, "cross": mc}
+        return x, new_c
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B,1); pos: scalar decoder position."""
+        cfg, policy = self.cfg, self.policy
+        B = tokens.shape[0]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1, 0)
+        x = (jnp.take(params["embed"], tokens, axis=0) + pe[None]).astype(
+            policy.compute_dtype)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+
+        def body(x, inp):
+            p, c = inp
+            return self._dec_layer_step(p, x, c, pos, positions)
+
+        if self.stacked:
+            x, new_stack = jax.lax.scan(body, x, (params["dec"]["stack"],
+                                                  cache["stack"]))
+            new_cache = {"stack": new_stack}
+        else:
+            new_layers = []
+            for p, c in zip(params["dec"]["layers"], cache["layers"]):
+                x, nc = body(x, (p, c))
+                new_layers.append(nc)
+            new_cache = {"layers": new_layers}
+        x = self._ln(params["dec"]["ln_f"], x)
+        logits = jnp.matmul(x[:, 0], params["embed"].T.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, new_cache

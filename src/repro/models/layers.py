@@ -1,0 +1,143 @@
+"""Shared model layers: norms, RoPE, activations, chunked cross-entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm in f32 accumulation (non-GeMM op => high precision per §4.1).
+    `plus_one` follows the Gemma convention (weight stored as offset)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (xf * w).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+# --- rotary position embeddings ---------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (S,) batch-uniform or (B, S) int32.
+    Rotates pairs (even, odd halves convention, LLaMA-style)."""
+    if positions.ndim == 1:
+        positions = positions[None]                            # (1, S)
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- embedding + loss --------------------------------------------------------
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray,
+                 compute_dtype=jnp.bfloat16, onehot: bool = False) -> jnp.ndarray:
+    """Embedding lookup.
+
+    onehot=True: Megatron-style vocab-parallel lookup as a one-hot matmul.
+    With the table sharded over 'model' on the vocab dim, GSPMD turns the
+    contraction into local-partial + psum of the (tokens, D) OUTPUT --
+    ~vocab/tokens x less communication than all-gathering the table, at
+    negligible per-chip MXU cost (the gemma3 hillclimb move, EXPERIMENTS.md
+    §Perf)."""
+    if onehot:
+        oh = jax.nn.one_hot(tokens, table.shape[0], dtype=compute_dtype)
+        return jnp.matmul(oh, table.astype(compute_dtype))
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def chunked_softmax_xent(x: jnp.ndarray, head_w: jnp.ndarray,
+                         labels: jnp.ndarray, mask: jnp.ndarray | None = None,
+                         chunk: int = 512,
+                         logit_softcap: float | None = None) -> jnp.ndarray:
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    x: (B,S,D) final hidden; head_w: (D,V) (often emb.T); labels: (B,S);
+    mask: (B,S) 1.0 = contributes. Scans over sequence chunks; each chunk's
+    logits are (B,chunk,V) and die inside the scan body.
+    """
+    B, S, D = x.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    n_chunks = max(1, S // chunk)
+    if S % chunk:
+        # pad to a multiple; padded positions are masked out
+        pad = n_chunks * chunk + chunk - S
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        n_chunks += 1
+    xs = x.reshape(B, n_chunks, -1, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, -1).transpose(1, 0, 2)
+    ms = mask.reshape(B, n_chunks, -1).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, lc, mc = inp
+        logits = jnp.matmul(xc, head_w, preferred_element_type=jnp.float32)
+        if logit_softcap is not None:
+            logits = softcap(logits, logit_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    carry = (jnp.float32(0), jnp.float32(0))
+    if n_chunks <= 16:
+        # Unrolled: exact FLOP accounting in the dry-run (XLA counts while
+        # bodies once) at negligible HLO-size cost.
+        for i in range(n_chunks):
+            carry, _ = body(carry, (xs[i], ls[i], ms[i]))
+    else:
+        carry, _ = jax.lax.scan(body, carry, (xs, ls, ms))
+    tot, cnt = carry
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def causal_lm_loss(x: jnp.ndarray, head_w: jnp.ndarray, tokens: jnp.ndarray,
+                   *, pad_id: int = 0, chunk: int = 512,
+                   logit_softcap: float | None = None,
+                   loss_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Next-token prediction: positions 0..S-2 predict tokens 1..S-1."""
+    labels = tokens[:, 1:]
+    mask = (labels != pad_id).astype(jnp.float32)
+    if loss_mask is not None:
+        mask = mask * loss_mask[:, 1:].astype(jnp.float32)
+    return chunked_softmax_xent(x[:, :-1], head_w, labels, mask, chunk,
+                                logit_softcap)

@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Q path:  x -> W_dq (q_lora) -> norm -> W_uq -> heads x (nope + rope)
+KV path: x -> W_dkv -> [c_kv (kv_lora) | k_rope (shared)] ; c_kv -> norm
+         c_kv -> W_ukv -> heads x (nope + v)
+
+The decode cache stores only (c_kv, k_rope): the compressed-latent memory
+saving that makes MLA attractive. K/V are re-expanded from the latent at
+decode time (naive MLA; the absorbed-matmul variant is a serve-side
+optimization, see EXPERIMENTS.md §Perf).
+
+All projections are GeMMs -> fp4_linear applies (paper's technique maps
+cleanly onto MLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import fp4_linear
+from repro.core.policy import QuantPolicy
+
+from . import attention as attn_mod
+from .blocks import CACHE_DTYPES
+from .layers import apply_rope, rms_norm
+from .param import ParamFactory
+
+
+def _n_heads(cfg) -> int:
+    """Head count used by the MLA compute graph. cfg.mla_pad_heads > n_heads
+    pads with extra (zero-contribution after W_o) heads so the flat head
+    dims divide the 16-way 'model' axis -- without it, GSPMD cannot shard
+    the (H, head_dim) reshape when H % 16 != 0 and replicates the whole
+    attention (the minicpm3 §Perf hillclimb move)."""
+    return max(cfg.n_heads, getattr(cfg, "mla_pad_heads", 0) or 0)
+
+
+def init_mla(pf: ParamFactory, cfg):
+    H = _n_heads(cfg)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "w_dq": pf.dense(cfg.d_model, cfg.q_lora_rank, ("embed", None)),
+        "q_norm": pf.ones((cfg.q_lora_rank,), (None,)),
+        "w_uq": pf.dense(cfg.q_lora_rank, H * qk_dim, (None, "heads")),
+        "w_dkv": pf.dense(cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim,
+                          ("embed", None)),
+        "kv_norm": pf.ones((cfg.kv_lora_rank,), (None,)),
+        "w_ukv": pf.dense(cfg.kv_lora_rank,
+                          H * (cfg.qk_nope_dim + cfg.v_head_dim),
+                          (None, "heads")),
+        "wo": pf.dense(H * cfg.v_head_dim, cfg.d_model, ("heads", "embed")),
+    }
+
+
+def _q_proj(p, x, positions, cfg, policy):
+    B, S, _ = x.shape
+    H = _n_heads(cfg)
+    cq = rms_norm(fp4_linear(x, p["w_dq"], policy=policy), p["q_norm"])
+    q = fp4_linear(cq, p["w_uq"], policy=policy)
+    q = q.reshape(B, S, H, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _kv_latent(p, x, positions, cfg, policy):
+    """Returns (c_kv normalized, k_rope roped): exactly what decode caches."""
+    ckv_full = fp4_linear(x, p["w_dkv"], policy=policy)
+    c_kv, k_rope = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def _expand_kv(p, c_kv, k_rope, cfg, policy):
+    B, S, _ = c_kv.shape
+    H = _n_heads(cfg)
+    kv = fp4_linear(c_kv, p["w_ukv"], policy=policy)
+    kv = kv.reshape(B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, cfg.qk_rope_dim)).astype(k_nope.dtype)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_train(p, x, positions, cfg, policy: QuantPolicy):
+    B, S, _ = x.shape
+    q = _q_proj(p, x, positions, cfg, policy)
+    c_kv, k_rope = _kv_latent(p, x, positions, cfg, policy)
+    k, v = _expand_kv(p, c_kv, k_rope, cfg, policy)
+    # v head dim differs from qk dim; pad v for the shared attention helper,
+    # slice after (keeps one attention implementation).
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - cfg.v_head_dim)))
+    out = attn_mod.attention(q, k, v_pad, positions, positions, causal=True,
+                             kv_chunk=cfg.attn_chunk)
+    out = out[..., :cfg.v_head_dim].reshape(B, S, -1)
+    return fp4_linear(out, p["wo"], policy=policy)
+
+
+def init_mla_cache(cfg, batch: int, max_len: int):
+    dt = CACHE_DTYPES[cfg.cache_dtype]
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dt),
+        "kv_pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def mla_prefill(p, x, positions, cache, cfg, policy: QuantPolicy):
+    """Parallel prompt processing; caches the compressed latents."""
+    B, S, _ = x.shape
+    q = _q_proj(p, x, positions, cfg, policy)
+    c_kv, k_rope = _kv_latent(p, x, positions, cfg, policy)
+    k, v = _expand_kv(p, c_kv, k_rope, cfg, policy)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - cfg.v_head_dim)))
+    out = attn_mod.attention(q, k, v_pad, positions, positions, causal=True,
+                             kv_chunk=cfg.attn_chunk)
+    out = out[..., :cfg.v_head_dim].reshape(B, S, -1)
+    y = fp4_linear(out, p["wo"], policy=policy)
+    ck = cache["c_kv"].at[:, :S].set(c_kv.astype(cache["c_kv"].dtype))
+    cr = cache["k_rope"].at[:, :S].set(k_rope.astype(cache["k_rope"].dtype))
+    pos2d = positions[None] if positions.ndim == 1 else positions
+    cpos = cache["kv_pos"].at[:, :S].set(pos2d)
+    return y, {"c_kv": ck, "k_rope": cr, "kv_pos": cpos}
+
+
+def mla_decode(p, x, cache, pos, cfg, policy: QuantPolicy):
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = _q_proj(p, x, positions, cfg, policy)
+    c_kv, k_rope = _kv_latent(p, x, positions, cfg, policy)
+    ck = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+    cr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["kv_pos"], positions, (0, pos))
+    k, v = _expand_kv(p, ck.astype(x.dtype), cr.astype(x.dtype), cfg, policy)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - cfg.v_head_dim)))
+    out = attn_mod.dense_attention(q, k, v_pad, positions, cpos, causal=True)
+    out = out[..., :cfg.v_head_dim].reshape(B, 1, -1)
+    y = fp4_linear(out, p["wo"], policy=policy)
+    return y, {"c_kv": ck, "k_rope": cr, "kv_pos": cpos}

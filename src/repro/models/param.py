@@ -1,0 +1,83 @@
+"""Parameter trees with logical sharding axes.
+
+Every parameter is created through `ParamFactory`, which records a parallel
+tree of *logical axis names* (e.g. ("embed", "mlp")). `dist/sharding.py`
+maps logical names onto mesh axes; models never mention mesh axes directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Boxed:
+    """A leaf holding (value, logical_axes). Trees of Boxed are split into a
+    value tree and an axes tree with `split_tree`."""
+    value: Any
+    axes: tuple[str | None, ...]
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def split_tree(tree):
+    """tree of Boxed -> (params tree, logical-axes tree)."""
+    params = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return params, axes
+
+
+class ParamFactory:
+    """Splittable PRNG + initializers that attach logical axes.
+
+    Initialization follows standard LLM practice: truncated-normal fan-in
+    scaling for projections, normal(0.02-ish) embeddings, zeros for biases.
+    Params are created in float32 (master precision); the forward pass casts
+    to the policy compute dtype.
+    """
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, in_dim: int, out_dim: int, axes: tuple[str | None, str | None],
+              scale: float | None = None) -> Boxed:
+        scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+        w = jax.random.truncated_normal(
+            self._next(), -3, 3, (in_dim, out_dim), self.dtype) * scale
+        return Boxed(w, axes)
+
+    def stacked_dense(self, stack: int, in_dim: int, out_dim: int,
+                      axes: tuple[str | None, str | None, str | None],
+                      scale: float | None = None) -> Boxed:
+        """(stack, in, out) -- e.g. per-expert weights with axes[0]='expert'."""
+        scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+        w = jax.random.truncated_normal(
+            self._next(), -3, 3, (stack, in_dim, out_dim), self.dtype) * scale
+        return Boxed(w, axes)
+
+    def embedding(self, vocab: int, dim: int,
+                  axes: tuple[str | None, str | None] = ("vocab", "embed"),
+                  scale: float = 0.02) -> Boxed:
+        w = jax.random.normal(self._next(), (vocab, dim), self.dtype) * scale
+        return Boxed(w, axes)
+
+    def zeros(self, shape: tuple[int, ...], axes: tuple[str | None, ...]) -> Boxed:
+        return Boxed(jnp.zeros(shape, self.dtype), axes)
+
+    def ones(self, shape: tuple[int, ...], axes: tuple[str | None, ...]) -> Boxed:
+        return Boxed(jnp.ones(shape, self.dtype), axes)
+
+    def const(self, value: np.ndarray | jnp.ndarray,
+              axes: tuple[str | None, ...]) -> Boxed:
+        return Boxed(jnp.asarray(value, self.dtype), axes)

@@ -1,0 +1,181 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+The decay w_t = exp(-exp(w0 + tanh(x @ A) @ B)) is data-dependent (the
+paper's headline Finch feature); token-shift mixing uses static learned
+interpolation (the LoRA'd dynamic mix of the full release is omitted --
+documented deviation, DESIGN.md §9).
+
+The WKV recurrence is a linear scan over time:
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+Per-step state is (B, H, hd, hd). On real TPU this is the natural target
+for a chunked Pallas kernel (kernels/ has the GeMM kernels; the WKV chunk
+kernel is listed as a §Perf item). All projections (r/k/v/g/o and
+channel-mix) are GeMMs -> fp4_linear.
+
+Scan inventory: trip_count = S, body FLOPs ~= 4*B*D*hd (outer products +
+readout) -- reported analytically for the roofline correction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import fp4_linear
+from repro.core.policy import QuantPolicy
+
+from .layers import rms_norm
+from .param import ParamFactory
+
+LORA_R = 64
+
+
+def _dims(cfg):
+    H = cfg.d_model // cfg.ssm_head_dim if cfg.ssm_head_dim else cfg.n_heads
+    return H, cfg.d_model // H
+
+
+def init_rwkv(pf: ParamFactory, cfg):
+    D = cfg.d_model
+    H, hd = _dims(cfg)
+    return {
+        "ln_t": pf.ones((D,), (None,)),
+        "ln_c": pf.ones((D,), (None,)),
+        # token-shift interpolation weights for r,k,v,g,w
+        "mu": pf.const(jnp.full((5, D), 0.5), (None, None)),
+        "w0": pf.const(jnp.full((D,), -1.0), (None,)),
+        "w_lora_a": pf.dense(D, LORA_R, ("embed", None), scale=0.01),
+        "w_lora_b": pf.dense(LORA_R, D, (None, "embed"), scale=0.01),
+        "wr": pf.dense(D, D, ("embed", "heads")),
+        "wk": pf.dense(D, D, ("embed", "heads")),
+        "wv": pf.dense(D, D, ("embed", "heads")),
+        "wg": pf.dense(D, D, ("embed", "heads")),
+        "wo": pf.dense(D, D, ("heads", "embed")),
+        "u": pf.zeros((H, hd), ("heads", None)),
+        "ln_x": pf.ones((D,), (None,)),
+        # channel mix
+        "mu_ck": pf.const(jnp.full((D,), 0.5), (None,)),
+        "mu_cr": pf.const(jnp.full((D,), 0.5), (None,)),
+        "wck": pf.dense(D, cfg.d_ff, ("embed", "mlp")),
+        "wcv": pf.dense(cfg.d_ff, D, ("mlp", "embed")),
+        "wcr": pf.dense(D, D, ("embed", "embed2")),
+    }
+
+
+def _shift(x):
+    """prev-token shift: y_t = x_{t-1}, y_0 = 0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _time_mix_inputs(p, h, h_prev, cfg, policy):
+    """h: (B,S,D) normed input; h_prev: shifted. Returns r,k,v,g,w heads."""
+    B, S, D = h.shape
+    H, hd = _dims(cfg)
+    mu = p["mu"].astype(h.dtype)
+    xr, xk, xv, xg, xw = [h + (h_prev - h) * mu[i] for i in range(5)]
+    r = fp4_linear(xr, p["wr"], policy=policy).reshape(B, S, H, hd)
+    k = fp4_linear(xk, p["wk"], policy=policy).reshape(B, S, H, hd)
+    v = fp4_linear(xv, p["wv"], policy=policy).reshape(B, S, H, hd)
+    g = jax.nn.silu(fp4_linear(xg, p["wg"], policy=policy))
+    # data-dependent decay (Finch): w in (0,1)
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(h.dtype)) @ \
+        p["w_lora_b"].astype(h.dtype)
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32)))
+    return r, k, v, g, w.reshape(B, S, H, hd)
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """Linear-time WKV. r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd).
+    Returns (out (B,S,H,hd), final state). f32 state for stability."""
+    def body(state, inp):
+        rt, kt, vt, wt = inp                     # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, out
+
+    rs, ks, vs, ws = [t.transpose(1, 0, 2, 3).astype(jnp.float32)
+                      for t in (r, k, v, w)]
+    state, outs = jax.lax.scan(body, state0, (rs, ks, vs, ws))
+    return outs.transpose(1, 0, 2, 3), state
+
+
+def rwkv_train(p, x, positions, cfg, layer, policy: QuantPolicy):
+    B, S, D = x.shape
+    H, hd = _dims(cfg)
+    # --- time mix ---
+    h = rms_norm(x, p["ln_t"])
+    r, k, v, g, w = _time_mix_inputs(p, h, _shift(h), cfg, policy)
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    out, _ = _wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), state0)
+    out = rms_norm(out.reshape(B, S, D).astype(x.dtype), p["ln_x"]) * g
+    x = x + fp4_linear(out, p["wo"], policy=policy)
+    # --- channel mix ---
+    h = rms_norm(x, p["ln_c"])
+    hp = _shift(h)
+    xk = h + (hp - h) * p["mu_ck"].astype(h.dtype)
+    xr = h + (hp - h) * p["mu_cr"].astype(h.dtype)
+    kk = jnp.square(jax.nn.relu(fp4_linear(xk, p["wck"], policy=policy)))
+    rr = jax.nn.sigmoid(fp4_linear(xr, p["wcr"], policy=policy))
+    return x + rr * fp4_linear(kk, p["wcv"], policy=policy)
+
+
+def rwkv_prefill(p, x, positions, cache, cfg, layer, policy: QuantPolicy):
+    """Parallel prompt processing; returns final WKV state + shift tails."""
+    B, S, D = x.shape
+    H, hd = _dims(cfg)
+    h = rms_norm(x, p["ln_t"])
+    r, k, v, g, w = _time_mix_inputs(p, h, _shift(h), cfg, policy)
+    out, state = _wkv_scan(r, k, v, w, p["u"].astype(jnp.float32),
+                           cache["state"])
+    out = rms_norm(out.reshape(B, S, D).astype(x.dtype), p["ln_x"]) * g
+    x = x + fp4_linear(out, p["wo"], policy=policy)
+    h2 = rms_norm(x, p["ln_c"])
+    hp = _shift(h2)
+    xk = h2 + (hp - h2) * p["mu_ck"].astype(h2.dtype)
+    xr = h2 + (hp - h2) * p["mu_cr"].astype(h2.dtype)
+    kk = jnp.square(jax.nn.relu(fp4_linear(xk, p["wck"], policy=policy)))
+    rr = jax.nn.sigmoid(fp4_linear(xr, p["wcr"], policy=policy))
+    x = x + rr * fp4_linear(kk, p["wcv"], policy=policy)
+    new_cache = {"state": state,
+                 "x_prev_t": h[:, -1:].astype(jnp.float32),
+                 "x_prev_c": h2[:, -1:].astype(jnp.float32)}
+    return x, new_cache
+
+
+def init_rwkv_cache(cfg, layer, batch: int, max_len: int):
+    D = cfg.d_model
+    H, hd = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_prev_t": jnp.zeros((batch, 1, D), jnp.float32),
+        "x_prev_c": jnp.zeros((batch, 1, D), jnp.float32),
+    }
+
+
+def rwkv_decode(p, x, cache, pos, cfg, layer, policy: QuantPolicy):
+    B = x.shape[0]
+    D = cfg.d_model
+    H, hd = _dims(cfg)
+    h = rms_norm(x, p["ln_t"])
+    h_prev = cache["x_prev_t"].astype(h.dtype)
+    r, k, v, g, w = _time_mix_inputs(p, h, h_prev, cfg, policy)
+    rt, kt, vt, wt = [t[:, 0].astype(jnp.float32) for t in (r, k, v, w)]
+    kv = kt[..., :, None] * vt[..., None, :]
+    u = p["u"].astype(jnp.float32)
+    out = jnp.einsum("bhk,bhkv->bhv", rt, cache["state"] + u[None, :, :, None] * kv)
+    state = wt[..., :, None] * cache["state"] + kv
+    out = rms_norm(out.reshape(B, 1, D).astype(x.dtype), p["ln_x"]) * g
+    x = x + fp4_linear(out, p["wo"], policy=policy)
+
+    h2 = rms_norm(x, p["ln_c"])
+    h2_prev = cache["x_prev_c"].astype(h2.dtype)
+    xk = h2 + (h2_prev - h2) * p["mu_ck"].astype(h2.dtype)
+    xr = h2 + (h2_prev - h2) * p["mu_cr"].astype(h2.dtype)
+    kk = jnp.square(jax.nn.relu(fp4_linear(xk, p["wck"], policy=policy)))
+    rr = jax.nn.sigmoid(fp4_linear(xr, p["wcr"], policy=policy))
+    x = x + rr * fp4_linear(kk, p["wcv"], policy=policy)
+    new_cache = {"state": state, "x_prev_t": h.astype(jnp.float32),
+                 "x_prev_c": h2.astype(jnp.float32)}
+    return x, new_cache

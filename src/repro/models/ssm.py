@@ -1,0 +1,214 @@
+"""Mamba2 (SSD) block -- chunked state-space dual form, matmul-dominant.
+
+TPU adaptation: the SSD chunked algorithm is MXU-friendly (within-chunk
+quadratic terms are batched GeMMs); the cross-chunk recurrence is a
+`lax.scan` over chunks whose body is also GeMM-heavy. All decays are
+computed as exp of *non-positive* cumulative sums, so every exponential is
+bounded by 1 (numerically safe in bf16/f32).
+
+Projections (in/out/gate) are GeMMs -> fp4_linear applies. The recurrence
+itself is not a GeMM against weights -> stays high precision (the paper's
+non-GeMM rule; noted in DESIGN.md §5 for zamba2/rwkv6).
+
+Scan inventory: trip_count = S / ssm_chunk; body FLOPs dominated by
+(L x L) score GeMMs and (L x N x P) state GeMMs -- reported analytically by
+configs' flops model for the roofline correction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import fp4_linear
+from repro.core.policy import QuantPolicy
+
+from .blocks import CACHE_DTYPES
+from .layers import rms_norm
+from .param import ParamFactory
+
+CONV_K = 4  # mamba2 short causal depthwise conv
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(pf: ParamFactory, cfg):
+    d_inner, H, P, N = _dims(cfg)
+    return {
+        "ln": pf.ones((cfg.d_model,), (None,)),
+        "in_zx": pf.dense(cfg.d_model, 2 * d_inner, ("embed", "mlp")),
+        "in_bcdt": pf.dense(cfg.d_model, 2 * N + H, ("embed", None)),
+        "conv_x": pf.zeros((d_inner, CONV_K), ("mlp", None)),
+        "conv_b": pf.zeros((N, CONV_K), (None, None)),
+        "conv_c": pf.zeros((N, CONV_K), (None, None)),
+        "a_log": pf.const(jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+                          (None,)),
+        "d_skip": pf.ones((H,), (None,)),
+        "dt_bias": pf.zeros((H,), (None,)),
+        "gate_ln": pf.ones((d_inner,), ("mlp",)),
+        "out": pf.dense(d_inner, cfg.d_model, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv, kernel CONV_K. x: (B,S,C), w: (C,K)."""
+    B, S, C = x.shape
+    xp = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(CONV_K):
+        out = out + xp[:, i:i + S] * w[:, i]
+    return out
+
+
+def _proj_split(p, h, cfg, policy):
+    d_inner, H, P, N = _dims(cfg)
+    zx = fp4_linear(h, p["in_zx"], policy=policy)
+    z, xs = jnp.split(zx, 2, axis=-1)
+    bcdt = fp4_linear(h, p["in_bcdt"], policy=policy)
+    b, c, dt = jnp.split(bcdt, [N, 2 * N], axis=-1)
+    return z, xs, b, c, dt
+
+
+def ssm_train(p, x, positions, cfg, layer, policy: QuantPolicy):
+    y, _ = _ssd_block(p, x, cfg, policy)
+    return y
+
+
+def ssm_prefill(p, x, positions, cache, cfg, layer, policy: QuantPolicy):
+    """Parallel prompt processing; returns the recurrent + conv state."""
+    y, st = _ssd_block(p, x, cfg, policy)
+    return y, st
+
+
+def _ssd_block(p, x, cfg, policy: QuantPolicy):
+    """Full SSD block: norm -> proj -> conv -> chunked SSD -> gate -> out.
+    Returns (residual output, cache-state dict)."""
+    B, S, D = x.shape
+    d_inner, H, P, N = _dims(cfg)
+    L = _pick_chunk(S, cfg.ssm_chunk)
+
+    h = rms_norm(x, p["ln"], plus_one=cfg.norm_plus_one)
+    z, xs_raw, b_raw, c_raw, dt = _proj_split(p, h, cfg, policy)
+    xs = jax.nn.silu(_causal_conv(xs_raw, p["conv_x"]))
+    b = jax.nn.silu(_causal_conv(b_raw, p["conv_b"]))
+    c = jax.nn.silu(_causal_conv(c_raw, p["conv_c"]))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                      # (H,)
+    xh = xs.reshape(B, S, H, P)
+    da = dt * a                                                       # (B,S,H) <= 0
+
+    nc = S // L
+    xc = xh.reshape(B, nc, L, H, P).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(B, nc, L, N).transpose(1, 0, 2, 3)
+    cc = c.reshape(B, nc, L, N).transpose(1, 0, 2, 3)
+    dac = da.reshape(B, nc, L, H).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B, nc, L, H).transpose(1, 0, 2, 3)
+
+    mask = jnp.tril(jnp.ones((L, L), jnp.float32))
+
+    def chunk_body(state, inp):
+        xcb, bcb, ccb, dab, dtb = inp          # (B,L,...)
+        cum = jnp.cumsum(dab, axis=1)          # (B,L,H), non-positive & decreasing
+        # intra-chunk: Y[i] = sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) dt_j x_j
+        scores = jnp.einsum("bin,bjn->bij", ccb, bcb,
+                            preferred_element_type=jnp.float32)
+        # mask the exponent, not the product: for i<j the difference is
+        # positive and exp overflows to inf (inf*0 = NaN).
+        diff = cum[:, :, None, :] - cum[:, None, :, :]                # (B,L,L,H)
+        decay = jnp.exp(jnp.where(mask[None, :, :, None] > 0, diff, -jnp.inf))
+        m = scores[..., None] * decay
+        m = m * dtb[:, None, :, :]
+        y = jnp.einsum("bijh,bjhp->bihp", m.astype(xcb.dtype), xcb)
+        # inter-chunk: Y[i] += (C_i . state) * exp(cum_i)
+        y = y + jnp.einsum("bin,bhpn->bihp", ccb, state).astype(y.dtype) * \
+            jnp.exp(cum)[..., None].astype(y.dtype)
+        # state update: state' = state*exp(cum_L) + sum_j exp(cum_L - cum_j) dt_j B_j x_j
+        last = cum[:, -1]                                              # (B,H)
+        w = (dtb * jnp.exp(last[:, None, :] - cum)).astype(xcb.dtype)  # (B,L,H)
+        new_state = state * jnp.exp(last)[:, :, None, None] + \
+            jnp.einsum("blh,bln,blhp->bhpn", w, bcb.astype(xcb.dtype), xcb
+                       ).astype(jnp.float32)
+        return new_state, y
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    # remat the chunk body: the (B,L,L,H) decay tensor would otherwise be
+    # saved per chunk for backward (O(nc * L^2 * H) residual memory).
+    state, ys = jax.lax.scan(jax.checkpoint(chunk_body), state0,
+                             (xc, bc, cc, dac, dtc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_ln"])
+    out = x + fp4_linear(y, p["out"], policy=policy)
+    # conv tails: last K-1 *pre-activation* conv inputs (the raw projections)
+    st = {
+        "state": state,
+        "conv_x": _tail(xs_raw, S),
+        "conv_b": _tail(b_raw, S),
+        "conv_c": _tail(c_raw, S),
+    }
+    return out, st
+
+
+def _pick_chunk(S: int, max_chunk: int) -> int:
+    """Largest divisor of S that is <= max_chunk (exact chunking keeps the
+    carried state correct for prefill)."""
+    L = min(max_chunk, S)
+    while S % L:
+        L -= 1
+    return L
+
+
+def _tail(t, S):
+    """Last CONV_K-1 positions (zero-left-padded if S < K-1), f32."""
+    k = CONV_K - 1
+    t = t.astype(jnp.float32)
+    if S >= k:
+        return t[:, S - k:S]
+    return jnp.pad(t, ((0, 0), (k - S, 0), (0, 0)))
+
+
+def init_ssm_cache(cfg, layer, batch: int, max_len: int):
+    d_inner, H, P, N = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, CONV_K - 1, d_inner), jnp.float32),
+        "conv_b": jnp.zeros((batch, CONV_K - 1, N), jnp.float32),
+        "conv_c": jnp.zeros((batch, CONV_K - 1, N), jnp.float32),
+    }
+
+
+def _conv_step(xc, w, buf):
+    """Single-token causal conv. xc: (B,1,C), buf: (B,K-1,C)."""
+    window = jnp.concatenate([buf, xc.astype(buf.dtype)], axis=1)   # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", window, w)[:, None, :]
+    return y.astype(xc.dtype), window[:, 1:]
+
+
+def ssm_decode(p, x, cache, pos, cfg, layer, policy: QuantPolicy):
+    B = x.shape[0]
+    d_inner, H, P, N = _dims(cfg)
+    h = rms_norm(x, p["ln"], plus_one=cfg.norm_plus_one)
+    z, xs, b, c, dt = _proj_split(p, h, cfg, policy)
+    xs, conv_x = _conv_step(xs, p["conv_x"], cache["conv_x"])
+    b, conv_b = _conv_step(b, p["conv_b"], cache["conv_b"])
+    c, conv_c = _conv_step(c, p["conv_c"], cache["conv_c"])
+    xs, b, c = jax.nn.silu(xs), jax.nn.silu(b), jax.nn.silu(c)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                               # (B,H)
+    xh = xs[:, 0].reshape(B, H, P).astype(jnp.float32)
+    state = cache["state"] * da[:, :, None, None] + \
+        jnp.einsum("bh,bn,bhp->bhpn", dt, b[:, 0].astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_ln"])
+    out = x + fp4_linear(y, p["out"], policy=policy)
+    return out, {"state": state, "conv_x": conv_x, "conv_b": conv_b,
+                 "conv_c": conv_c}

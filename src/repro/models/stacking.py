@@ -1,0 +1,50 @@
+"""Layer stacking for scan-over-layers execution.
+
+The dry-run compiles 24-81-layer models on a single-core CPU host; unrolled
+layers make XLA compile time O(L). `find_group` detects the smallest
+repeating unit in a layer plan (1 for homogeneous stacks, 2 for gemma2's
+local/global alternation, 6 for gemma3's 5:1 and zamba2's shared-block
+cadence); params/caches for the repeated group are stacked with a leading
+(n_groups,) dim and executed with `lax.scan`. Any non-repeating tail is
+executed unrolled.
+
+Accounting note (EXPERIMENTS.md): XLA cost_analysis counts a while body
+once; analysis/flops.py adds (1 - 1/n_groups) of the scanned layers'
+analytic FLOPs back. Collectives are multiplied by the parsed trip count
+(analysis/hlo.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .param import Boxed, is_boxed
+
+
+def find_group(plan: list[dict]) -> tuple[int, int]:
+    """Returns (group_size, n_groups) with n_groups >= 2, maximizing
+    coverage; (0, 0) if no useful repetition."""
+    L = len(plan)
+    for g in range(1, L // 2 + 1):
+        n = L // g
+        if n < 2:
+            break
+        if all(plan[i] == plan[i % g] for i in range(n * g)):
+            return g, n
+    return 0, 0
+
+
+def stack_boxed_trees(trees: list):
+    """Stack a list of identical-structure Boxed trees along a new leading
+    'layer' axis."""
+    def stack(*leaves):
+        vals = [l.value for l in leaves]
+        axes = ("layer",) + tuple(leaves[0].axes)
+        return Boxed(jnp.stack(vals), axes)
+
+    return jax.tree.map(stack, *trees, is_leaf=is_boxed)
+
+
+def stack_trees(trees: list):
+    """Stack plain array trees (caches) along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)

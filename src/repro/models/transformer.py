@@ -1,0 +1,331 @@
+"""CausalLM: decoder-only assembly covering dense / MoE / SSM / hybrid /
+RWKV / embedding-frontend (VLM) families from a single layer plan.
+
+Pure-functional API:
+    m = CausalLM(cfg, policy)
+    params, specs = m.init(key)
+    loss, metrics  = m.loss(params, batch)
+    cache          = m.init_cache(batch_size, max_len)
+    logits, cache  = m.decode_step(params, cache, tokens, pos)
+    logits, cache  = m.prefill(params, batch, cache)
+
+Execution modes:
+  * cfg.scan_layers=False -- every layer unrolled (exact per-layer HLO).
+  * cfg.scan_layers=True  -- the repeating layer group (stacking.find_group)
+    is stacked along a leading (n_groups,) axis and run with lax.scan;
+    the non-repeating tail stays unrolled. Params/caches change structure
+    accordingly ("stack"/"rest" instead of a flat list). The dry-run uses
+    this mode (compile time O(group) instead of O(L)).
+
+`act_constraint` is injected by the distribution layer to apply
+sequence-parallel sharding constraints between layers without the model
+knowing mesh axis names.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import fp4_linear
+from repro.core.policy import QuantPolicy
+
+from . import blocks, rwkv, ssm, stacking
+from .layers import causal_lm_loss, embed_lookup, rms_norm
+from .param import Boxed, ParamFactory, split_tree
+
+_SHARED_LAYER = {"kind": "attn", "window": None, "ffn": "dense"}
+
+
+def _remat(cfg):
+    """jax.checkpoint wrapper honoring cfg.remat_policy ('dots' trades
+    activation memory for ~25% less backward recompute -- §Perf)."""
+    if getattr(cfg, "remat_policy", "full") == "dots":
+        import functools
+        return functools.partial(
+            jax.checkpoint,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint
+
+
+class CausalLM:
+    def __init__(self, cfg, policy: QuantPolicy,
+                 act_constraint: Callable | None = None):
+        self.cfg = cfg
+        self.policy = policy
+        self.plan = cfg.layer_plan()
+        self.constrain = act_constraint or (lambda x: x)
+        if getattr(cfg, "scan_layers", False):
+            self.group_size, self.n_groups = stacking.find_group(self.plan)
+        else:
+            self.group_size, self.n_groups = 0, 0
+
+    @property
+    def stacked(self) -> bool:
+        return self.n_groups >= 2
+
+    @property
+    def _tail_start(self) -> int:
+        return self.group_size * self.n_groups if self.stacked else 0
+
+    def _shared_layer(self):
+        return dict(_SHARED_LAYER, rope_theta=self.cfg.rope_theta)
+
+    # ------------------------------------------------------------------ init
+    def _init_one_layer(self, pf, layer):
+        cfg = self.cfg
+        kind = layer["kind"]
+        if kind in ("attn", "mla"):
+            return blocks.init_layer(pf, cfg, layer)
+        if kind == "ssm":
+            return ssm.init_ssm(pf, cfg)
+        if kind == "rwkv":
+            return rwkv.init_rwkv(pf, cfg)
+        if kind == "shared_attn":
+            return {"_placeholder": pf.zeros((1,), (None,))}
+        raise ValueError(kind)
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        pf = ParamFactory(key)
+        tree: dict[str, Any] = {
+            "embed": pf.embedding(cfg.vocab_size, cfg.d_model),
+            "ln_f": (pf.zeros if cfg.norm_plus_one else pf.ones)(
+                (cfg.d_model,), (None,)),
+        }
+        if not cfg.tie_embeddings:
+            tree["head"] = pf.dense(cfg.d_model, cfg.vocab_size,
+                                    ("embed", "vocab"))
+        per_layer = [self._init_one_layer(pf, l) for l in self.plan]
+        if self.stacked:
+            g, n = self.group_size, self.n_groups
+            tree["stack"] = [
+                stacking.stack_boxed_trees([per_layer[k * g + p]
+                                            for k in range(n)])
+                for p in range(g)
+            ]
+            tree["rest"] = per_layer[self._tail_start:]
+        else:
+            tree["layers"] = per_layer
+        if any(l["kind"] == "shared_attn" for l in self.plan):
+            tree["shared"] = blocks.init_layer(pf, cfg, self._shared_layer())
+        return split_tree(tree)
+
+    # ----------------------------------------------------------------- embed
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "embeddings":
+            x = batch["embeds"].astype(self.policy.compute_dtype)
+        else:
+            x = embed_lookup(params["embed"], batch["tokens"],
+                             self.policy.compute_dtype,
+                             onehot=self.cfg.embed_onehot)
+        if cfg.embed_scale_sqrt_d:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return x
+
+    def _head_w(self, params):
+        if "head" in params:
+            return params["head"].astype(self.policy.compute_dtype)
+        return params["embed"].T.astype(self.policy.compute_dtype)
+
+    # ------------------------------------------------------------ layer exec
+    def _apply_train(self, p, shared_p, x, positions, layer):
+        cfg, policy = self.cfg, self.policy
+        kind = layer["kind"]
+        if kind in ("attn", "mla"):
+            y, aux = blocks.layer_train(p, x, positions, cfg, layer, policy)
+        elif kind == "ssm":
+            y, aux = ssm.ssm_train(p, x, positions, cfg, layer, policy), 0.0
+        elif kind == "rwkv":
+            y, aux = rwkv.rwkv_train(p, x, positions, cfg, layer, policy), 0.0
+        elif kind == "shared_attn":
+            y, aux = blocks.layer_train(shared_p, x, positions, cfg,
+                                        self._shared_layer(), policy)
+        return self.constrain(y), jnp.float32(aux)
+
+    def backbone(self, params, x, positions):
+        """Runs all layers; returns (hidden, total_aux_loss)."""
+        cfg = self.cfg
+        shared_p = params.get("shared")
+        aux0 = jnp.float32(0.0)
+
+        if self.stacked:
+            group_plan = self.plan[:self.group_size]
+
+            def group_body(carry, stacked_slice):
+                x, aux = carry
+                for p_idx, layer in enumerate(group_plan):
+                    # nested remat: group-level remat alone lets XLA keep all
+                    # in-group layer recomputations live during backward
+                    def one(p, sp, x, positions, _layer=layer):
+                        return self._apply_train(p, sp, x, positions, _layer)
+                    if cfg.remat and len(group_plan) > 1:
+                        one = _remat(cfg)(one)
+                    x, a = one(stacked_slice[p_idx], shared_p, x, positions)
+                    aux = aux + a
+                return (x, aux), None
+
+            body = _remat(cfg)(group_body) if cfg.remat else group_body
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), params["stack"])
+            tail_params = params["rest"]
+            tail_plan = self.plan[self._tail_start:]
+        else:
+            aux = aux0
+            tail_params = params["layers"]
+            tail_plan = self.plan
+
+        for p, layer in zip(tail_params, tail_plan):
+            def fn(p, shared_p, x, positions, _layer=layer):
+                return self._apply_train(p, shared_p, x, positions, _layer)
+            if cfg.remat:
+                fn = _remat(cfg)(fn)
+            x, a = fn(p, shared_p, x, positions)
+            aux = aux + a
+        return rms_norm(x, params["ln_f"], plus_one=cfg.norm_plus_one), aux
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        B, S = x.shape[:2]
+        positions = batch.get("positions",
+                              jnp.arange(S, dtype=jnp.int32))
+        x, aux = self.backbone(params, x, positions)
+        head_w = self._head_w(params)
+        tokens = batch["labels"] if cfg.frontend == "embeddings" else \
+            batch["tokens"]
+        lm = causal_lm_loss(x, head_w, tokens, chunk=cfg.loss_chunk,
+                            logit_softcap=cfg.final_softcap,
+                            loss_mask=batch.get("loss_mask"))
+        loss = lm + 0.01 * aux
+        return loss, {"lm_loss": lm, "aux_loss": aux}
+
+    # ----------------------------------------------------------------- serve
+    def _init_one_cache(self, layer, batch_size, max_len):
+        cfg = self.cfg
+        kind = layer["kind"]
+        if kind in ("attn", "mla"):
+            return blocks.init_layer_cache(cfg, layer, batch_size, max_len)
+        if kind == "shared_attn":
+            return blocks.init_layer_cache(cfg, self._shared_layer(),
+                                           batch_size, max_len)
+        if kind == "ssm":
+            return ssm.init_ssm_cache(cfg, layer, batch_size, max_len)
+        return rwkv.init_rwkv_cache(cfg, layer, batch_size, max_len)
+
+    def init_cache(self, batch_size: int, max_len: int):
+        per_layer = [self._init_one_cache(l, batch_size, max_len)
+                     for l in self.plan]
+        if self.stacked:
+            g, n = self.group_size, self.n_groups
+            return {
+                "stack": [stacking.stack_trees([per_layer[k * g + p]
+                                                for k in range(n)])
+                          for p in range(g)],
+                "rest": per_layer[self._tail_start:],
+            }
+        return {"layers": per_layer}
+
+    def _apply_decode(self, p, shared_p, x, c, pos, layer):
+        cfg, policy = self.cfg, self.policy
+        kind = layer["kind"]
+        if kind in ("attn", "mla"):
+            x, c = blocks.layer_decode(p, x, c, pos, cfg, layer, policy)
+        elif kind == "shared_attn":
+            x, c = blocks.layer_decode(shared_p, x, c, pos, cfg,
+                                       self._shared_layer(), policy)
+        elif kind == "ssm":
+            x, c = ssm.ssm_decode(p, x, c, pos, cfg, layer, policy)
+        else:
+            x, c = rwkv.rwkv_decode(p, x, c, pos, cfg, layer, policy)
+        return self.constrain(x), c
+
+    def _apply_prefill(self, p, shared_p, x, c, positions, layer):
+        cfg, policy = self.cfg, self.policy
+        kind = layer["kind"]
+        if kind in ("attn", "mla"):
+            x, c = blocks.layer_prefill(p, x, positions, c, cfg, layer, policy)
+        elif kind == "shared_attn":
+            x, c = blocks.layer_prefill(shared_p, x, positions, c, cfg,
+                                        self._shared_layer(), policy)
+        elif kind == "ssm":
+            x, c = ssm.ssm_prefill(p, x, positions, c, cfg, layer, policy)
+        else:
+            x, c = rwkv.rwkv_prefill(p, x, positions, c, cfg, layer, policy)
+        return self.constrain(x), c
+
+    def _run_serve(self, params, cache, x, apply_fn):
+        """Shared scan/unroll plumbing for decode_step and prefill.
+        apply_fn(p, shared_p, x, c, layer) closes over pos/positions."""
+        shared_p = params.get("shared")
+        if self.stacked:
+            group_plan = self.plan[:self.group_size]
+
+            def step(x, inp):
+                p_slice, c_slice = inp
+                new_c = []
+                for p_idx, layer in enumerate(group_plan):
+                    x, c = apply_fn(p_slice[p_idx], shared_p, x,
+                                    c_slice[p_idx], layer)
+                    new_c.append(c)
+                return x, new_c
+
+            x, new_stack = jax.lax.scan(step, x,
+                                        (params["stack"], cache["stack"]))
+            new_rest = []
+            for p, c, layer in zip(params["rest"], cache["rest"],
+                                   self.plan[self._tail_start:]):
+                x, c = apply_fn(p, shared_p, x, c, layer)
+                new_rest.append(c)
+            return x, {"stack": new_stack, "rest": new_rest}
+        new_layers = []
+        for p, c, layer in zip(params["layers"], cache["layers"], self.plan):
+            x, c = apply_fn(p, shared_p, x, c, layer)
+            new_layers.append(c)
+        return x, {"layers": new_layers}
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B,1) int32 (or embeds (B,1,D)); pos: scalar int32.
+        Returns (logits (B,V), new_cache)."""
+        cfg, policy = self.cfg, self.policy
+        if cfg.frontend == "embeddings" and tokens.ndim == 3:
+            x = tokens.astype(policy.compute_dtype)
+        else:
+            x = embed_lookup(params["embed"], tokens, policy.compute_dtype)
+        if cfg.embed_scale_sqrt_d:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+        apply_fn = lambda p, sp, x, c, layer: self._apply_decode(
+            p, sp, x, c, pos, layer)
+        x, new_cache = self._run_serve(params, cache, x, apply_fn)
+        x = rms_norm(x, params["ln_f"], plus_one=cfg.norm_plus_one)
+        logits = jnp.matmul(x[:, 0], self._head_w(params),
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits, new_cache
+
+    def prefill(self, params, batch, cache):
+        """Parallel prompt processing + cache fill.
+        Returns (last-position logits (B,V), filled cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        B, S = x.shape[:2]
+        positions = batch.get("positions", jnp.arange(S, dtype=jnp.int32))
+
+        def apply_fn(p, sp, x, c, layer):
+            def fn(p, sp, x, c, _layer=layer):
+                return self._apply_prefill(p, sp, x, c, positions, _layer)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            return fn(p, sp, x, c)
+
+        x, new_cache = self._run_serve(params, cache, x, apply_fn)
+        x = rms_norm(x, params["ln_f"], plus_one=cfg.norm_plus_one)
+        logits = jnp.matmul(x[:, -1], self._head_w(params),
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits, new_cache

@@ -1,0 +1,157 @@
+"""Mixed-precision Adam after FP8-LM (paper §4.1):
+
+  * first moments  m  stored in FP8 (E4M3) + per-tensor f32 scale
+  * second moments v  stored in FP16
+  * master weights    f32
+  * model weights     cast to compute dtype by the forward pass
+
+The fp8 moment storage is *real* (jnp.float8_e4m3fn arrays), not simulated:
+update math runs in f32, storage rounds through e4m3 with a fresh absmax
+scale each step (matches FP8-LM's per-tensor scaling).
+
+State is a pytree parallel to params; `zero1_specs` extends param specs by
+sharding optimizer state over 'data' on the largest divisible replicated
+dim (ZeRO-1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # moment storage (paper recipe). Set both to "float32" for the BF16
+    # baseline arm.
+    m_dtype: str = "float8_e4m3fn"
+    v_dtype: str = "float16"
+    # Per-coordinate update clipping (|mhat/sqrt(vhat)| cap). Required for
+    # fp8 first moments: quantization noise in m over coordinates whose v
+    # is ~0 (rare embedding rows) otherwise yields unbounded updates --
+    # noise/sqrt(0). Adam's update is ~±1 per coordinate in steady state,
+    # so a small multiple of 1 is non-binding for healthy coordinates.
+    update_clip: float = 3.0
+
+
+class MomentFP8(NamedTuple):
+    """fp8 payload + f32 absmax scale."""
+    q: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def _store_m(m_f32, dtype: str):
+    if dtype == "float8_e4m3fn":
+        q, s = quantize.quantize_fp8(m_f32)
+        return MomentFP8(q, s)
+    return m_f32.astype(dtype)
+
+
+def _load_m(m) -> jnp.ndarray:
+    if isinstance(m, MomentFP8):
+        return quantize.dequantize_fp8(m.q, m.scale)
+    return m.astype(jnp.float32)
+
+
+def init_state(params, cfg: AdamConfig):
+    def one(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return {
+            "master": p.astype(jnp.float32),
+            "m": _store_m(z, cfg.m_dtype),
+            "v": z.astype(cfg.v_dtype),
+        }
+    return {"t": jnp.zeros((), jnp.int32), "per_param": jax.tree.map(one, params)}
+
+
+def apply_update(params, grads, state, lr, cfg: AdamConfig):
+    """One Adam step. Returns (new_params_in_orig_dtype, new_state)."""
+    t = state["t"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** t.astype(jnp.float32)
+    c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+    def one(p, g, s):
+        g = g.astype(jnp.float32)
+        m = _load_m(s["m"]) * b1 + (1 - b1) * g
+        v = s["v"].astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        master = s["master"]
+        raw = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.update_clip:
+            raw = jnp.clip(raw, -cfg.update_clip, cfg.update_clip)
+        upd = raw + cfg.weight_decay * master
+        master = master - lr * upd
+        return master.astype(p.dtype), {
+            "master": master,
+            "m": _store_m(m, cfg.m_dtype),
+            "v": v.astype(cfg.v_dtype),
+        }
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["per_param"])
+    out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_s = treedef.unflatten([o[1] for o in out])
+    return new_p, {"t": t, "per_param": new_s}
+
+
+def global_norm(grads) -> jnp.ndarray:
+    leaves = [jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype),
+                        grads), norm
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 sharding for optimizer state
+# --------------------------------------------------------------------------
+
+def zero1_specs(param_spec_tree, params, mesh):
+    """Extend each param's PartitionSpec by sharding the largest replicated
+    divisible dim over 'data' (optimizer-state-only sharding)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    data = mesh.shape.get("data", 1) if hasattr(mesh.shape, "get") else \
+        dict(mesh.shape).get("data", 1)
+
+    def extend(spec: P, p):
+        entries = list(spec) + [None] * (p.ndim - len(spec))
+        if "data" in [e for ent in entries if ent for e in
+                      (ent if isinstance(ent, tuple) else (ent,))]:
+            return P(*entries)
+        # find the largest dim that is replicated & divisible
+        best, best_dim = -1, -1
+        for i, (d, e) in enumerate(zip(p.shape, entries)):
+            if e is None and d % data == 0 and d > best_dim:
+                best, best_dim = i, d
+        if best >= 0:
+            entries[best] = "data"
+        return P(*entries)
+
+    def one(spec, p):
+        sp = extend(spec if isinstance(spec, P) else P(*spec), p)
+        moment_shard = NamedSharding(mesh, sp)
+        return {
+            "master": moment_shard,
+            "m": MomentFP8(moment_shard,
+                           NamedSharding(mesh, P())),
+            "v": moment_shard,
+        }
+
+    return jax.tree.map(one, param_spec_tree, params,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,16 @@
+"""LR schedule (paper §4.1): 5% linear warmup, cosine decay to 10% of peak
+over the remaining 95%. Peak 3e-4, weight decay 0.1 (set in AdamConfig)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, total_steps: int, peak_lr: float = 3e-4,
+                  warmup_frac: float = 0.05, final_frac: float = 0.10):
+    step = jnp.asarray(step, jnp.float32)
+    warmup = max(1.0, warmup_frac * total_steps)
+    warm_lr = peak_lr * step / warmup
+    t = jnp.clip((step - warmup) / max(1.0, total_steps - warmup), 0.0, 1.0)
+    cos_lr = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                        (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm_lr, cos_lr)

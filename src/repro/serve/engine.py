@@ -1,0 +1,54 @@
+"""Serving: prefill + batched decode steps with sharded KV caches.
+
+`make_serve_step` returns the jitted single-token decode function the
+decode_32k / long_500k dry-run cells lower: one new token for every request
+in the batch against a seq_len-deep cache. Cache sharding: batch -> DP axes,
+cache sequence dim -> 'model' (2D; DESIGN.md §4), fp8 cache storage
+optional per config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shard_rules
+
+
+def make_serve_step(model, mesh):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        # greedy sampling head (sampling params are a host concern)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+    return serve_step
+
+
+def serve_shardings(model, params, cache, mesh):
+    """(param shardings, cache shardings, token sharding)."""
+    _, axes = jax.eval_shape(lambda k: model.init(k),
+                             jax.random.PRNGKey(0))  # axes only
+    return None  # placeholder; launch/dryrun builds these directly
+
+
+def greedy_generate(model, params, batch, steps: int, max_len: int,
+                    memory_len: int = 0):
+    """Host-side loop for examples/tests: prefill then `steps` decode steps."""
+    B = next(iter(batch.values())).shape[0]
+    if memory_len:
+        cache = model.init_cache(B, max_len, memory_len=memory_len)
+    else:
+        cache = model.init_cache(B, max_len)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    if "tokens" in batch:
+        pos0 = batch["tokens"].shape[1]
+    else:
+        pos0 = batch["embeds"].shape[1]
+    step = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for t in range(steps - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(pos0 + t))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

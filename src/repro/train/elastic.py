@@ -1,0 +1,32 @@
+"""Elastic scaling: move a training state between mesh shapes.
+
+Checkpoints are mesh-independent (full logical arrays, train/checkpoint.py),
+so elastic restart is: load -> rebuild shardings for the new mesh ->
+device_put. Batch-size/schedule invariance across DP width is the trainer's
+job (global batch is fixed; per-shard batch = global/DP).
+
+`reshard_state` also handles the live case (no checkpoint round-trip) for
+in-job shrink/grow events: jax.device_put with the new NamedSharding
+reshards across the new device set.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.dist import sharding as shard_rules
+from repro.train import train_step as ts_mod
+
+
+def reshard_state(state, axes, new_mesh):
+    """Place an unsharded (or differently-sharded) state onto new_mesh."""
+    shardings = ts_mod.state_shardings(state, axes, new_mesh)
+    return jax.device_put(state, shardings)
+
+
+def elastic_restore(ckpt_dir: str, state_template, axes, new_mesh,
+                    step: int | None = None):
+    """Checkpoint -> new mesh in one call."""
+    from repro.train import checkpoint as ckpt_mod
+    shardings = ts_mod.state_shardings(state_template, axes, new_mesh)
+    return ckpt_mod.restore(ckpt_dir, state_template, step=step,
+                            shardings=shardings)

@@ -1,0 +1,133 @@
+"""Training loop with production fault tolerance:
+
+  * periodic atomic checkpoints + exact resume (data position = step)
+  * NaN/Inf loss detection: skip the update, log, and abort after a budget
+    (FP4 instability guard -- the paper's Fig. 6c divergence mode)
+  * failure recovery: a step that raises is retried from the last good
+    checkpoint (injectable failures for tests)
+  * straggler watchdog: EWMA step-time anomaly detection with pluggable
+    action (log / checkpoint-and-continue)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import checkpoint as ckpt_mod
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_dir: str | None = None
+    ckpt_every: int = 200
+    keep_ckpts: int = 3
+    max_nan_skips: int = 5
+    max_retries: int = 2
+    log_every: int = 10
+    straggler_ewma: float = 0.9
+    straggler_k: float = 3.0     # flag step if > k x EWMA
+    on_straggler: str = "log"    # "log" | "checkpoint"
+
+
+class StragglerWatchdog:
+    def __init__(self, cfg: TrainerConfig):
+        self.cfg = cfg
+        self.ewma = None
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.cfg.straggler_k * self.ewma
+        if slow:
+            self.flagged.append((step, dt))
+        self.ewma = (self.cfg.straggler_ewma * self.ewma +
+                     (1 - self.cfg.straggler_ewma) * dt)
+        return slow
+
+
+class Trainer:
+    def __init__(self, step_fn: Callable, state, batch_fn: Callable,
+                 cfg: TrainerConfig, place_batch: Callable | None = None,
+                 fail_injector: Callable | None = None):
+        """step_fn(state, batch) -> (state, metrics); batch_fn(step) -> batch
+        (host numpy); place_batch optionally device_puts with shardings."""
+        self.step_fn = step_fn
+        self.state = state
+        self.batch_fn = batch_fn
+        self.cfg = cfg
+        self.place_batch = place_batch or (lambda b: b)
+        self.fail_injector = fail_injector
+        self.watchdog = StragglerWatchdog(cfg)
+        self.history: list[dict] = []
+        self.nan_skips = 0
+        self.start_step = int(jax.device_get(state["step"]))
+
+    def _try_resume(self):
+        if not self.cfg.ckpt_dir:
+            return
+        step = ckpt_mod.latest_step(self.cfg.ckpt_dir)
+        if step is not None:
+            self.state, manifest = ckpt_mod.restore(self.cfg.ckpt_dir,
+                                                    self.state)
+            self.start_step = int(jax.device_get(self.state["step"]))
+
+    def _save(self, step: int):
+        if self.cfg.ckpt_dir:
+            ckpt_mod.save(self.cfg.ckpt_dir, step, self.state)
+            ckpt_mod.keep_last(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
+
+    def run(self, resume: bool = True) -> list[dict]:
+        if resume:
+            self._try_resume()
+        step = self.start_step
+        retries = 0
+        while step < self.cfg.total_steps:
+            batch = self.place_batch(self.batch_fn(step))
+            t0 = time.time()
+            try:
+                if self.fail_injector:
+                    self.fail_injector(step)
+                new_state, metrics = self.step_fn(self.state, batch)
+                loss = float(jax.device_get(metrics["loss"]))
+            except ckpt_mod.json.JSONDecodeError:  # pragma: no cover
+                raise
+            except Exception as e:  # noqa: BLE001 -- node-failure recovery
+                retries += 1
+                if retries > self.cfg.max_retries or not self.cfg.ckpt_dir:
+                    raise
+                self.state, _ = ckpt_mod.restore(self.cfg.ckpt_dir, self.state)
+                step = int(jax.device_get(self.state["step"]))
+                self.history.append({"step": step, "event": "restored",
+                                     "error": repr(e)})
+                continue
+            dt = time.time() - t0
+            if not np.isfinite(loss):
+                # FP4 divergence guard: skip this update
+                self.nan_skips += 1
+                self.history.append({"step": step, "event": "nan_skip"})
+                if self.nan_skips > self.cfg.max_nan_skips:
+                    raise FloatingPointError(
+                        f"{self.nan_skips} non-finite losses; aborting")
+                step += 1
+                continue
+            self.state = new_state
+            slow = self.watchdog.observe(step, dt)
+            if slow and self.cfg.on_straggler == "checkpoint":
+                self._save(step)
+            rec = {"step": step, "loss": loss, "dt": dt,
+                   "grad_norm": float(jax.device_get(metrics["grad_norm"]))}
+            self.history.append(rec)
+            if step % self.cfg.ckpt_every == 0 and step > self.start_step:
+                self._save(step)
+            step += 1
+        if self.cfg.ckpt_dir:
+            self._save(step)
+        return self.history

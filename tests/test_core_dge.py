@@ -1,0 +1,79 @@
+"""DGE estimator: derivative formula, clipping, custom_vjp wiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dge, formats, quantize
+
+
+def test_derivative_matches_eq8_first_interval():
+    # First positive interval [0, 0.5]: delta=0.5, f'(x) = (1/k)|4x-1|^(1/k-1)
+    k = 5.0
+    xs = jnp.asarray([0.05, 0.1, 0.2, 0.3, 0.4, 0.45])
+    got = dge.dge_derivative(xs, k=k, clip=1e9)
+    t = xs / 0.5
+    want = (1.0 / k) * jnp.abs(2 * t - 1) ** (1.0 / k - 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_derivative_clipped_at_midpoint():
+    # At interval midpoints the raw derivative diverges; must equal clip.
+    mids = jnp.asarray([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0])
+    got = dge.dge_derivative(mids, k=5.0, clip=3.0)
+    np.testing.assert_allclose(np.asarray(got), 3.0, rtol=1e-4)
+
+
+def test_derivative_zero_outside_range():
+    xs = jnp.asarray([-7.0, 6.5, 100.0])
+    np.testing.assert_array_equal(np.asarray(dge.dge_derivative(xs)), 0.0)
+
+
+def test_derivative_finite_everywhere():
+    xs = jnp.linspace(-6.5, 6.5, 10001)
+    d = np.asarray(dge.dge_derivative(xs))
+    assert np.all(np.isfinite(d))
+    assert np.all(d <= 3.0 + 1e-6) and np.all(d >= 0.0)
+
+
+def test_derivative_symmetric_negative_intervals():
+    # E2M1 grid is symmetric; derivative at x and the mirrored position of
+    # the mirrored interval should agree.
+    xs = jnp.asarray([0.1, 0.6, 1.1, 2.2, 3.3, 4.5])
+    d_pos = np.asarray(dge.dge_derivative(xs))
+    d_neg = np.asarray(dge.dge_derivative(-xs))
+    np.testing.assert_allclose(d_pos, d_neg, rtol=1e-5)
+
+
+def test_dge_forward_is_hard_quantization():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 4
+    np.testing.assert_array_equal(np.asarray(dge.dge_quantize(x)),
+                                  np.asarray(quantize.lut_round(x)))
+
+
+def test_dge_gradient_is_weighted():
+    x = jnp.asarray([0.1, 0.4, 1.2, 3.3])
+    g = jax.grad(lambda v: jnp.sum(dge.dge_quantize(v)))(x)
+    want = dge.dge_derivative(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), rtol=1e-5)
+
+
+def test_ste_gradient_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (32,)) * 4
+    g = jax.grad(lambda v: jnp.sum(dge.ste_quantize(v)))(x)
+    np.testing.assert_array_equal(np.asarray(g), 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1.5, 10.0), st.floats(1.5, 10.0))
+def test_larger_k_sharper_transition(k_small, k_big):
+    # Larger k => derivative smaller far from midpoint (flatter plateaus).
+    if k_small > k_big:
+        k_small, k_big = k_big, k_small
+    if abs(k_small - k_big) < 0.2:
+        return
+    x = jnp.asarray([0.05])  # near interval edge, far from midpoint
+    d_small = float(dge.dge_derivative(x, k=k_small, clip=1e9)[0])
+    d_big = float(dge.dge_derivative(x, k=k_big, clip=1e9)[0])
+    assert d_big <= d_small + 1e-6

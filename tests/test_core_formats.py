@@ -1,0 +1,73 @@
+"""Format tables, LUT rounding, int8 exactness, 4-bit packing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, quantize
+
+
+def test_e2m1_grid_matches_paper_table4():
+    expected = [-6, -4, -3, -2, -1.5, -1, -0.5, 0, 0.5, 1, 1.5, 2, 3, 4, 6]
+    assert formats.E2M1.values.tolist() == expected
+    assert formats.E2M1.max_value == 6.0
+
+
+def test_e1m2_e3m0_grids_match_paper_table4():
+    assert formats.E1M2.values.tolist() == [
+        -3.5, -3, -2.5, -2, -1.5, -1, -0.5, 0, 0.5, 1, 1.5, 2, 2.5, 3, 3.5]
+    assert formats.E3M0.values.tolist() == [
+        -16, -8, -4, -2, -1, -0.5, -0.25, 0, 0.25, 0.5, 1, 2, 4, 8, 16]
+
+
+def test_lut_round_matches_paper_cuda_thresholds():
+    # Paper App. A kernel: explicit threshold chain. Check each branch.
+    cases = [(-7.0, -6.0), (-5.1, -6.0), (-4.9, -4.0), (-3.6, -4.0),
+             (-3.4, -3.0), (-2.6, -3.0), (-2.4, -2.0), (-1.8, -2.0),
+             (-1.7, -1.5), (-1.3, -1.5), (-1.2, -1.0), (-0.8, -1.0),
+             (-0.7, -0.5), (-0.3, -0.5), (-0.2, 0.0), (0.2, 0.0),
+             (0.3, 0.5), (0.7, 0.5), (0.8, 1.0), (1.2, 1.0), (1.3, 1.5),
+             (1.7, 1.5), (1.8, 2.0), (2.4, 2.0), (2.6, 3.0), (3.4, 3.0),
+             (3.6, 4.0), (4.9, 4.0), (5.1, 6.0), (7.0, 6.0)]
+    x = jnp.asarray([c[0] for c in cases])
+    want = np.asarray([c[1] for c in cases])
+    got = np.asarray(quantize.lut_round(x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_grid_values_idempotent_under_rounding():
+    v = jnp.asarray(formats.E2M1.values, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(quantize.lut_round(v)), np.asarray(v))
+
+
+def test_int8_codes_exact_roundtrip():
+    v = jnp.asarray(formats.E2M1.values, jnp.float32)
+    codes = formats.to_int8_codes(v)
+    assert codes.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(formats.from_int8_codes(codes)),
+                                  np.asarray(v))
+
+
+def test_int8_gemm_equals_fp4_gemm_exactly():
+    rng = np.random.default_rng(0)
+    a = quantize.lut_round(jnp.asarray(rng.normal(size=(16, 32)) * 3, jnp.float32))
+    w = quantize.lut_round(jnp.asarray(rng.normal(size=(32, 8)) * 3, jnp.float32))
+    ref = np.asarray(a, np.float64) @ np.asarray(w, np.float64)
+    a8, w8 = formats.to_int8_codes(a), formats.to_int8_codes(w)
+    got = np.asarray(jnp.matmul(a8, w8, preferred_element_type=jnp.int32)) / 4.0
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(1)
+    x = quantize.lut_round(jnp.asarray(rng.normal(size=(8, 64)) * 4, jnp.float32))
+    idx = formats.values_to_indices(x)
+    packed = formats.pack_e2m1(idx)
+    assert packed.shape == (8, 32) and packed.dtype == jnp.uint8
+    back = formats.indices_to_values(formats.unpack_e2m1(packed))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_bf16_represents_grid_exactly():
+    v = jnp.asarray(formats.E2M1.values, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(v.astype(jnp.bfloat16), np.float32),
+                                  np.asarray(v))

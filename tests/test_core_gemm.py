@@ -1,0 +1,144 @@
+"""fp4_matmul / fp4_linear: forward semantics + the paper's exact backward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dge, formats, occ, quantize
+from repro.core.fp4_gemm import fp4_matmul
+from repro.core.linear import fp4_linear
+from repro.core.policy import BF16, FP4_PAPER, TENSOR_WISE, W4A4_DIRECT, QuantPolicy
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, key, scale=1.0):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+def test_fp4_matmul_forward_matches_manual_reference():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((8, 16), k1), _rand((16, 4), k2)
+    pol = FP4_PAPER.replace(occ=False, compute="float32")
+    got = fp4_matmul(a, w, pol)
+    # manual: quantize, matmul, rescale
+    sa = quantize.absmax_scale(a, -1, 6.0)
+    sw = quantize.absmax_scale(w, 0, 6.0)
+    aq = quantize.lut_round(a * sa)
+    wq = quantize.lut_round(w * sw)
+    want = (aq @ wq) / sa / sw
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=1e-4)
+
+
+def test_int8_backend_bit_identical_to_sim():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((32, 64), k1), _rand((64, 16), k2)
+    pol = FP4_PAPER.replace(occ=False, compute="float32")
+    y_sim = fp4_matmul(a, w, pol)
+    y_int8 = fp4_matmul(a, w, pol.replace(gemm_backend="int8"))
+    np.testing.assert_allclose(np.asarray(y_sim), np.asarray(y_int8),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_backward_matches_paper_eq22():
+    """dW must equal (A_dq^T @ g) * f'(W_scaled); dA must equal g @ W_dq^T."""
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((8, 16), k1), _rand((16, 4), k2)
+    pol = FP4_PAPER.replace(occ=False, compute="float32")
+
+    y, vjp = jax.vjp(lambda a, w: fp4_matmul(a, w, pol), a, w)
+    g = jnp.ones_like(y)
+    da, dw = vjp(g)
+
+    sa = quantize.absmax_scale(a, -1, 6.0)
+    sw = quantize.absmax_scale(w, 0, 6.0)
+    a_dq = quantize.lut_round(a * sa) / sa
+    w_dq = quantize.lut_round(w * sw) / sw
+    want_dw = (a_dq.T @ g) * dge.dge_derivative(w * sw, k=5.0, clip=3.0)
+    want_da = g @ w_dq.T
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(want_dw), rtol=2e-2, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(want_da), rtol=2e-2, atol=2e-3)
+
+
+def test_ste_vs_dge_gradients_differ():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((8, 16), k1), _rand((16, 4), k2)
+    def grad_w(pol):
+        return jax.grad(lambda w: jnp.sum(fp4_matmul(a, w, pol)))(w)
+    g_dge = grad_w(FP4_PAPER.replace(occ=False))
+    g_ste = grad_w(W4A4_DIRECT)
+    assert not np.allclose(np.asarray(g_dge), np.asarray(g_ste))
+
+
+def test_disabled_policy_is_plain_matmul():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((8, 16), k1), _rand((16, 4), k2)
+    got = fp4_matmul(a, w, BF16)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(a @ w), rtol=1e-2)
+
+
+def test_tensor_wise_higher_error_with_outliers():
+    """Fig. 6d: vector-wise beats tensor-wise under per-row dynamic range."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = _rand((64, 128), k1)
+    a = a.at[5].mul(100.0)  # one hot row blows up tensor-wise scaling
+    w = _rand((128, 32), k2, 0.1)
+    exact = np.asarray(a @ w)
+    pol = FP4_PAPER.replace(occ=False, compute="float32")
+    err_vec = np.linalg.norm(np.asarray(fp4_matmul(a, w, pol)) - exact)
+    err_ten = np.linalg.norm(
+        np.asarray(fp4_matmul(a, w, TENSOR_WISE.replace(occ=False, compute="float32"))) - exact)
+    assert err_vec < err_ten
+
+
+def test_fp4_linear_occ_dense_and_channel_and_bias():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = _rand((32, 64), k1)
+    a = a.at[:, 3].mul(80.0)  # channel outlier
+    w = _rand((64, 16), k2, 0.1)
+    b = _rand((16,), k3)
+    exact = np.asarray(a @ w + b)
+    for comp in ["dense", "channel", "none"]:
+        pol = FP4_PAPER.replace(occ_comp=comp, occ_threshold="exact",
+                                compute="float32")
+        y = np.asarray(fp4_linear(a, w, b, policy=pol))
+        assert y.shape == exact.shape and np.all(np.isfinite(y))
+    err_dense = np.linalg.norm(np.asarray(fp4_linear(
+        a, w, b, policy=FP4_PAPER.replace(occ_comp="dense", occ_threshold="exact",
+                                          compute="float32"))) - exact)
+    err_none = np.linalg.norm(np.asarray(fp4_linear(
+        a, w, b, policy=FP4_PAPER.replace(occ_comp="none", occ_threshold="exact",
+                                          compute="float32"))) - exact)
+    assert err_dense < err_none  # compensation must help
+
+
+def test_occ_improves_gemm_accuracy_with_outliers():
+    k1, k2 = jax.random.split(KEY)
+    a = _rand((64, 128), k1)
+    a = a.at[:, 7].mul(60.0)
+    w = _rand((128, 32), k2, 0.1)
+    exact = np.asarray(a @ w)
+    pol_occ = FP4_PAPER.replace(occ_threshold="exact", compute="float32")
+    pol_no = FP4_PAPER.replace(occ=False, compute="float32")
+    err_occ = np.linalg.norm(np.asarray(fp4_linear(a, w, policy=pol_occ)) - exact)
+    err_no = np.linalg.norm(np.asarray(fp4_linear(a, w, policy=pol_no)) - exact)
+    assert err_occ < err_no
+
+
+def test_grad_flows_through_occ_paths():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((16, 32), k1), _rand((32, 8), k2)
+    pol = FP4_PAPER.replace(occ_threshold="exact", compute="float32")
+    da, dw = jax.grad(lambda a, w: jnp.sum(fp4_linear(a, w, policy=pol)),
+                      argnums=(0, 1))(a, w)
+    assert np.all(np.isfinite(np.asarray(da)))
+    assert np.all(np.isfinite(np.asarray(dw)))
+    assert float(jnp.linalg.norm(dw)) > 0
+
+
+def test_batched_3d_activation_shapes():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((4, 8, 32), k1), _rand((32, 16), k2)
+    y = fp4_linear(a, w, policy=FP4_PAPER.replace(compute="float32"))
+    assert y.shape == (4, 8, 16)

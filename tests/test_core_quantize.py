@@ -1,0 +1,83 @@
+"""Vector-wise absmax quantization properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import formats, quantize
+
+FMT = formats.E2M1
+
+
+def _finite_arrays(min_side=1, max_side=16):
+    return hnp.arrays(
+        np.float32,
+        hnp.array_shapes(min_dims=2, max_dims=2, min_side=min_side, max_side=max_side),
+        elements=st.floats(-1e4, 1e4, width=32, allow_nan=False),
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(_finite_arrays())
+def test_quantized_values_on_grid(x):
+    q, s = quantize.quantize(jnp.asarray(x), axis=-1)
+    grid = set(FMT.values.tolist())
+    assert all(float(v) in grid for v in np.asarray(q).reshape(-1))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_finite_arrays())
+def test_scale_maps_absmax_to_format_max(x):
+    q, s = quantize.quantize(jnp.asarray(x), axis=-1)
+    scaled_max = np.max(np.abs(x.astype(np.float64) * np.asarray(s, np.float64)),
+                        axis=-1)
+    # rows with absmax <= 1e-30 quantize to zero (f32 scale would overflow)
+    rows_nonzero = np.max(np.abs(x), axis=-1).reshape(-1) > 1e-30
+    np.testing.assert_allclose(scaled_max.reshape(-1)[rows_nonzero], 6.0, rtol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_finite_arrays())
+def test_dequant_error_bounded_by_half_interval(x):
+    # absmax scaling => scaled values in [-6, 6]; max rounding error is half
+    # the widest interval (1.0) in scaled space => error <= 1.0/scale.
+    xj = jnp.asarray(x)
+    q, s = quantize.quantize(xj, axis=-1)
+    deq = np.asarray(quantize.dequantize(q, s))
+    err = np.abs(deq - x)
+    bound = (1.0 + 1e-5) / np.asarray(s)
+    assert np.all(err <= bound + 1e-30)
+
+
+def test_token_vs_channel_axis_semantics():
+    x = jnp.asarray([[1.0, 2.0], [100.0, 200.0]], jnp.float32)
+    _, s_tok = quantize.quantize(x, axis=-1)   # per-row
+    assert s_tok.shape == (2, 1)
+    _, s_ch = quantize.quantize(x, axis=0)     # per-column
+    assert s_ch.shape == (1, 2)
+    _, s_t = quantize.quantize(x, axis=None)   # tensor-wise
+    assert np.asarray(s_t).shape == ()
+
+
+def test_zero_tensor_safe():
+    q, s = quantize.quantize(jnp.zeros((4, 4)), axis=-1)
+    assert np.all(np.isfinite(np.asarray(s)))
+    np.testing.assert_array_equal(np.asarray(q), 0.0)
+
+
+def test_fake_quant_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+    y = quantize.fake_quant(x, axis=-1)
+    z = quantize.fake_quant(y, axis=-1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(z), rtol=1e-6)
+
+
+def test_fp8_roundtrip_reasonable():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1024,)) * 10
+    x8, s = quantize.quantize_fp8(x)
+    assert x8.dtype == jnp.float8_e4m3fn
+    back = quantize.dequantize_fp8(x8, s)
+    rel = np.abs(np.asarray(back) - np.asarray(x)) / (np.abs(np.asarray(x)) + 1e-6)
+    assert np.median(rel) < 0.05  # e4m3 has ~2 decimal digits

@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, quantize
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------- fp4_quant
+
+@pytest.mark.parametrize("shape", [(8, 128), (256, 256), (300, 512),
+                                   (64, 1024), (1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fp4_quant_matches_ref(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 3).astype(dtype)
+    q, s = ops.fp4_quantize(x)
+    q_ref, s_ref = ref.fp4_quant_ref(x)
+    np.testing.assert_allclose(np.asarray(s, np.float32),
+                               np.asarray(s_ref, np.float32), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(q, np.float32),
+                                  np.asarray(q_ref, np.float32))
+
+
+def test_fp4_quant_outputs_on_grid():
+    x = jax.random.normal(KEY, (128, 256)) * 100
+    q, s = ops.fp4_quantize(x)
+    grid = set(formats.E2M1.values.tolist())
+    assert set(np.unique(np.asarray(q, np.float32))).issubset(grid)
+
+
+# ------------------------------------------------------------ fp4_matmul
+
+@pytest.mark.parametrize("mnk", [(128, 128, 128), (256, 512, 256),
+                                 (512, 128, 1024), (384, 256, 640)])
+def test_fp4_matmul_matches_ref(mnk):
+    M, N, K = mnk
+    k1, k2 = jax.random.split(KEY)
+    a = jax.random.normal(k1, (M, K))
+    w = jax.random.normal(k2, (K, N))
+    a_q, sa = quantize.quantize(a, axis=-1)
+    w_q, sw = quantize.quantize(w, axis=0)
+    got = ops.fp4_matmul_pallas(a_q, w_q, sa, sw, block_m=128, block_n=128,
+                                block_k=128)
+    want = ref.fp4_matmul_ref(a_q, w_q, sa, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fp4_matmul_equals_core_gemm():
+    """Kernel path == simulation path (same quantized operands)."""
+    k1, k2 = jax.random.split(KEY)
+    a = jax.random.normal(k1, (256, 512))
+    w = jax.random.normal(k2, (512, 128))
+    a_q, sa = quantize.quantize(a, axis=-1)
+    w_q, sw = quantize.quantize(w, axis=0)
+    kernel = ops.fp4_matmul_pallas(a_q, w_q, sa, sw)
+    sim = (a_q.astype(jnp.float32) @ w_q.astype(jnp.float32)) / sa / sw
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(sim),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fp4_matmul_int8_exactness_of_grid_products():
+    """E2M1 grid values multiply exactly in int8 (the TPU MXU claim)."""
+    vals = jnp.asarray(formats.E2M1.values, jnp.float32)
+    a = jnp.tile(vals, (8, 1))                 # (8, 15)
+    a = jnp.pad(a, ((0, 0), (0, 113)))         # (8, 128)
+    w = jnp.tile(vals[:, None], (1, 128))[:15]
+    w = jnp.pad(w, ((0, 113), (0, 0)))         # (128, 128)
+    f32 = a @ w
+    a8 = formats.to_int8_codes(a)
+    w8 = formats.to_int8_codes(w)
+    i8 = jnp.matmul(a8, w8, preferred_element_type=jnp.int32) / 4.0
+    np.testing.assert_array_equal(np.asarray(f32), np.asarray(i8))
+
+
+# ---------------------------------------------------------- outlier_clamp
+
+@pytest.mark.parametrize("shape", [(64, 128), (256, 384), (100, 256)])
+def test_outlier_clamp_matches_ref(shape):
+    x = jax.random.normal(KEY, shape) * 5
+    lo, hi = -2.5, 3.0
+    c, r = ops.outlier_clamp(x, lo, hi)
+    c_ref, r_ref = ref.outlier_clamp_ref(x, lo, hi)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(c + r), np.asarray(x), rtol=1e-6)
+
+
+# -------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("shape", [(1, 256, 2, 64), (2, 512, 4, 64),
+                                   (1, 256, 1, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(shape, causal):
+    B, S, H, D = shape
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, shape, jnp.float32)
+    k = jax.random.normal(k2, shape, jnp.float32)
+    v = jax.random.normal(k3, shape, jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=128,
+                              block_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_block_shape_independence():
+    B, S, H, D = 1, 512, 2, 64
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, S, H, D))
+    k = jax.random.normal(k2, (B, S, H, D))
+    v = jax.random.normal(k3, (B, S, H, D))
+    a = ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    b = ops.flash_attention(q, k, v, block_q=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                               atol=2e-3)

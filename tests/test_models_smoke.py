@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, assert output shapes + no NaNs + gradients flow. Full configs are only
+exercised via the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.policy import FP4_PAPER, BF16
+from repro.launch.inputs import make_batch
+from repro.models import build_model
+
+SEQ, BATCH = 64, 2
+
+# exact-quantile OCC on tiny tensors; sample mode needs big tensors
+SMOKE_POLICY = FP4_PAPER.replace(occ_threshold="exact")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS + ["llama2-400m"])
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg, SMOKE_POLICY)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SEQ, BATCH)
+
+    @jax.jit
+    def loss_and_grad(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        return loss, metrics, grads
+
+    loss, metrics, grads = loss_and_grad(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss is not finite"
+    # loss should be near ln(vocab) for random init
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 3 * np.log(cfg.vocab_size)
+    gnorms = jax.tree.map(lambda g: float(jnp.linalg.norm(g.astype(jnp.float32))),
+                          grads)
+    flat = jax.tree.leaves(gnorms)
+    assert all(np.isfinite(v) for v in flat), f"{arch}: non-finite grads"
+    assert sum(flat) > 0, f"{arch}: all-zero gradients"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_match_params(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg, SMOKE_POLICY)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    pleaves = jax.tree.leaves(params)
+    sleaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(pleaves) == len(sleaves)
+    for p, s in zip(pleaves, sleaves):
+        assert isinstance(s, tuple) and len(s) == p.ndim, (p.shape, s)
+
+
+@pytest.mark.parametrize("arch", ["llama2-400m", "gemma2-9b", "zamba2-7b",
+                                  "rwkv6-1.6b", "qwen3-moe-30b-a3b"])
+def test_decode_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg, SMOKE_POLICY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(BATCH, 32)
+    tok = jnp.ones((BATCH, 1), jnp.int32)
+    logits, cache = jax.jit(model.decode_step)(params, cache, tok,
+                                               jnp.int32(0))
+    assert logits.shape == (BATCH, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    logits2, _ = jax.jit(model.decode_step)(params, cache, tok, jnp.int32(1))
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+def test_bf16_baseline_runs():
+    cfg = get_config("llama2-400m", smoke=True)
+    model = build_model(cfg, BF16)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SEQ, BATCH)
+    loss, _ = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_whisper_decode_with_cross_attention():
+    cfg = get_config("whisper-medium", smoke=True)
+    model = build_model(cfg, SMOKE_POLICY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SEQ, BATCH)
+    cache = model.init_cache(BATCH, 32, memory_len=SEQ // 2)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape == (BATCH, cfg.vocab_size)
+    tok = jnp.ones((BATCH, 1), jnp.int32)
+    logits, _ = jax.jit(model.decode_step)(
+        params, cache, tok, jnp.int32(SEQ // 2))
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))

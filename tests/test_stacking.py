@@ -1,0 +1,96 @@
+"""scan-over-layers (stacked) execution must be numerically identical to the
+unrolled path -- same math, different program structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import BF16
+from repro.launch.inputs import make_batch
+from repro.models import build_model
+from repro.models.stacking import find_group
+
+POLICY = BF16.replace(compute="float32")
+
+
+def test_find_group_patterns():
+    mk = lambda k, **kw: dict({"kind": k}, **kw)
+    assert find_group([mk("attn")] * 8) == (1, 8)
+    # gemma2 alternation
+    plan = [mk("attn", window=16), mk("attn", window=None)] * 4
+    assert find_group(plan) == (2, 4)
+    # zamba cadence with remainder
+    plan = ([mk("ssm")] * 5 + [mk("shared_attn")]) * 3 + [mk("ssm")] * 2
+    assert find_group(plan) == (6, 3)
+    # no repetition
+    assert find_group([mk("attn"), mk("ssm")]) == (0, 0)
+
+
+def _stacked_params_from_unrolled(model_u, model_s, params_u):
+    """Restack unrolled params into the stacked structure for comparison."""
+    from repro.models.stacking import stack_trees
+    g, n = model_s.group_size, model_s.n_groups
+    layers = params_u["layers"]
+    out = {k: v for k, v in params_u.items() if k != "layers"}
+    out["stack"] = [stack_trees([layers[k * g + p] for k in range(n)])
+                    for p in range(g)]
+    out["rest"] = layers[g * n:]
+    return out
+
+
+@pytest.mark.parametrize("arch", ["llama2-400m", "gemma2-9b", "gemma3-27b",
+                                  "zamba2-7b", "rwkv6-1.6b",
+                                  "qwen3-moe-30b-a3b"])
+def test_stacked_loss_matches_unrolled(arch):
+    cfg_u = get_config(arch, smoke=True).replace(capacity_factor=8.0)
+    cfg_s = cfg_u.replace(scan_layers=True)
+    m_u = build_model(cfg_u, POLICY)
+    m_s = build_model(cfg_s, POLICY)
+    params_u, _ = m_u.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg_u, 32, 2)
+    loss_u, _ = m_u.loss(params_u, batch)
+    if not m_s.stacked:
+        pytest.skip(f"{arch}: no repeating group in smoke plan")
+    params_s = _stacked_params_from_unrolled(m_u, m_s, params_u)
+    loss_s, _ = m_s.loss(params_s, batch)
+    np.testing.assert_allclose(float(loss_u), float(loss_s), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["llama2-400m", "zamba2-7b", "rwkv6-1.6b"])
+def test_stacked_decode_matches_unrolled(arch):
+    cfg_u = get_config(arch, smoke=True).replace(cache_dtype="float32")
+    cfg_s = cfg_u.replace(scan_layers=True)
+    m_u = build_model(cfg_u, POLICY)
+    m_s = build_model(cfg_s, POLICY)
+    params_u, _ = m_u.init(jax.random.PRNGKey(0))
+    if not m_s.stacked:
+        pytest.skip(f"{arch}: no repeating group")
+    params_s = _stacked_params_from_unrolled(m_u, m_s, params_u)
+    B = 2
+    tok = jnp.ones((B, 1), jnp.int32)
+    cache_u = m_u.init_cache(B, 16)
+    cache_s = m_s.init_cache(B, 16)
+    for t in range(4):
+        lu, cache_u = m_u.decode_step(params_u, cache_u, tok, jnp.int32(t))
+        ls, cache_s = m_s.decode_step(params_s, cache_s, tok, jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(lu), np.asarray(ls), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_whisper_stacked_matches_unrolled():
+    cfg_u = get_config("whisper-medium", smoke=True)
+    cfg_s = cfg_u.replace(scan_layers=True)
+    m_u = build_model(cfg_u, POLICY)
+    m_s = build_model(cfg_s, POLICY)
+    params_u, _ = m_u.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg_u, 32, 2)
+    loss_u, _ = m_u.loss(params_u, batch)
+    from repro.models.stacking import stack_trees
+    params_s = dict(params_u)
+    params_s["enc"] = {"stack": stack_trees(params_u["enc"]["layers"]),
+                       "ln_post": params_u["enc"]["ln_post"]}
+    params_s["dec"] = {"stack": stack_trees(params_u["dec"]["layers"]),
+                       "ln_f": params_u["dec"]["ln_f"]}
+    loss_s, _ = m_s.loss(params_s, batch)
+    np.testing.assert_allclose(float(loss_u), float(loss_s), rtol=1e-5)

@@ -1,0 +1,159 @@
+"""Substrate tests: optimizer, schedule, data determinism, checkpointing,
+trainer fault tolerance, elastic resharding."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.optim import adam as adam_mod
+from repro.optim.schedule import warmup_cosine
+from repro.train import checkpoint as ckpt_mod
+
+
+# --------------------------------------------------------------------- adam
+
+def _quad_params():
+    return {"w": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.asarray([[0.5, -0.5]])}
+
+
+def test_adam_converges_on_quadratic():
+    cfg = adam_mod.AdamConfig(weight_decay=0.0)
+    params = _quad_params()
+    state = adam_mod.init_state(params, cfg)
+    loss = lambda p: sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
+    for _ in range(300):
+        grads = jax.grad(loss)(params)
+        params, state = adam_mod.apply_update(params, grads, state, 0.05, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adam_fp8_moments_are_fp8():
+    cfg = adam_mod.AdamConfig()
+    params = _quad_params()
+    state = adam_mod.init_state(params, cfg)
+    m = state["per_param"]["w"]["m"]
+    assert isinstance(m, adam_mod.MomentFP8)
+    assert m.q.dtype == jnp.float8_e4m3fn
+    assert state["per_param"]["w"]["v"].dtype == jnp.float16
+
+
+def test_adam_fp8_tracks_fp32_closely():
+    """The mixed-precision recipe must track full-precision Adam."""
+    k = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(k, (64,))
+    tgt = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    loss = lambda p: jnp.sum((p["w"] - tgt) ** 2)
+
+    def train(m_dtype, v_dtype):
+        cfg = adam_mod.AdamConfig(weight_decay=0.0, m_dtype=m_dtype,
+                                  v_dtype=v_dtype)
+        params = {"w": w0}
+        state = adam_mod.init_state(params, cfg)
+        for _ in range(100):
+            grads = jax.grad(loss)(params)
+            params, state = adam_mod.apply_update(params, grads, state,
+                                                  0.02, cfg)
+        return float(loss(params))
+
+    l_fp8 = train("float8_e4m3fn", "float16")
+    l_f32 = train("float32", "float32")
+    # Both arms must converge on the quadratic; mid-trajectory losses are
+    # noisy, so assert convergence rather than trajectory identity.
+    init = float(loss({"w": w0}))
+    assert l_f32 < 0.2 * init
+    assert l_fp8 < 0.3 * init
+
+
+def test_grad_clipping():
+    grads = {"w": jnp.full((4,), 100.0)}
+    clipped, norm = adam_mod.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(adam_mod.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedule_shape():
+    total = 1000
+    lrs = [float(warmup_cosine(s, total_steps=total, peak_lr=3e-4))
+           for s in range(0, total + 1, 50)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(3e-4, rel=0.05)
+    assert lrs[-1] == pytest.approx(3e-5, rel=0.05)  # 10% of peak
+
+
+# --------------------------------------------------------------------- data
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=8, seed=7)
+    ds = SyntheticLM(cfg)
+    a = ds.batch(step=3, shard=0, n_shards=2)
+    b = ds.batch(step=3, shard=0, n_shards=2)
+    np.testing.assert_array_equal(a, b)           # deterministic
+    c = ds.batch(step=3, shard=1, n_shards=2)
+    assert not np.array_equal(a, c)               # disjoint shards
+    d = ds.batch(step=4, shard=0, n_shards=2)
+    assert not np.array_equal(a, d)               # advances with step
+    assert a.shape == (4, 32) and a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < 512
+
+
+def test_data_is_learnable():
+    """Bigram structure => conditional entropy < unigram entropy."""
+    cfg = DataConfig(vocab_size=128, seq_len=256, global_batch=16)
+    ds = SyntheticLM(cfg)
+    toks = ds.global_batch(0)
+    # empirical check: P(next == markov_next | prev) ~ 0.75 >> 1/V
+    prev = toks[:, :-1]
+    nxt = toks[:, 1:]
+    markov_next = (prev + ds._state_shift[ds._tok_state[prev]]) % cfg.vocab_size
+    agreement = (nxt == markov_next).mean()
+    assert agreement > 0.5
+
+
+# --------------------------------------------------------------- checkpoint
+
+def _tiny_state():
+    return {
+        "params": {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3)},
+        "opt": {"m": adam_mod.MomentFP8(
+            jnp.asarray([1.0, 2.0], jnp.float8_e4m3fn),
+            jnp.asarray(1.0))},
+        "step": jnp.asarray(5, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip_bitexact(tmp_path):
+    state = _tiny_state()
+    ckpt_mod.save(str(tmp_path), 5, state)
+    restored, manifest = ckpt_mod.restore(str(tmp_path), state)
+    assert manifest["step"] == 5
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    state = _tiny_state()
+    ckpt_mod.save(str(tmp_path), 1, state)
+    ckpt_mod.save(str(tmp_path), 2, state)
+    entries = os.listdir(tmp_path)
+    assert sorted(entries) == ["step_00000001", "step_00000002"]
+    assert not any(e.endswith(".tmp") for e in entries)
+
+
+def test_checkpoint_retention(tmp_path):
+    state = _tiny_state()
+    for s in range(5):
+        ckpt_mod.save(str(tmp_path), s, state)
+    ckpt_mod.keep_last(str(tmp_path), 2)
+    assert ckpt_mod.latest_step(str(tmp_path)) == 4
+    assert len(os.listdir(tmp_path)) == 2
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ckpt_mod.save(str(tmp_path), 1, _tiny_state())
+    bad = {"params": {"w": jnp.zeros((2, 3), jnp.bfloat16)}}
+    with pytest.raises(ValueError, match="structure mismatch"):
+        ckpt_mod.restore(str(tmp_path), bad)
