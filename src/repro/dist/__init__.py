@@ -1,0 +1,21 @@
+"""Distribution substrate: sharding rules + low-bit gradient comms.
+
+The paper's FP4 recipe rides on a conventional mixed-precision
+*distributed* scheme -- vector-wise quantized GEMMs inside the model,
+sharded data/tensor parallelism and low-bit gradient sync outside
+(FP8-LM, arXiv:2310.18313). This package owns everything mesh-shaped:
+
+  sharding.py  -- logical-axis -> PartitionSpec rules, param/cache
+                  shardings, activation constraints (GSPMD side).
+  grad_comm.py -- fp8/bf16 gradient all-reduce across the inter-pod
+                  axis (shard_map side).
+  compat.py    -- jax version bridge (set_mesh / shard_map / typed
+                  mesh axes moved between jax 0.4.x and 0.5+).
+
+Models never import this package; they annotate parameters with logical
+axis names (models/param.py) and accept an opaque activation-constraint
+callable. Trainers/serving resolve those names here.
+"""
+from . import compat, grad_comm, sharding
+
+__all__ = ["compat", "grad_comm", "sharding"]

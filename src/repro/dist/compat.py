@@ -1,0 +1,92 @@
+"""jax version bridge for the distribution layer.
+
+The repo codes against the modern distribution API (``jax.set_mesh``,
+``jax.shard_map``, typed mesh axes). Older jaxlibs (0.4.x) expose the
+same machinery under different names and signatures; this module is the
+single import site that papers over the difference so callers never
+version-check themselves.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]):
+    """``jax.make_mesh`` with all-Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh` for name-based sharding.
+
+    jax >= 0.5: jax.set_mesh / jax.sharding.use_mesh. jax 0.4.x: the
+    Mesh object is itself the context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
+def manual_axis_names() -> set:
+    """Mesh axes bound *manually* at the current trace point (i.e. we are
+    inside a shard_map region over them). Sharding constraints must not
+    reference these -- the partitioner rejects specs naming manual axes.
+    """
+    # new jax: the active abstract mesh records Manual axis types
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and getattr(m, "manual_axes", None):
+            return set(m.manual_axes)
+    except AttributeError:
+        pass
+    # jax 0.4.x: shard_map binds manual axes in the named-axis env
+    try:
+        from jax._src import core as _core
+        return set(_core.get_axis_env().axis_sizes)
+    except Exception:
+        return set()
+
+
+def tree_flatten_with_path(tree):
+    """``jax.tree.flatten_with_path`` (new) / tree_util spelling (0.4.x)."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized `compiled.cost_analysis()`: jax 0.4.x returns a
+    one-element list of dicts, newer jax the dict itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` on new jax; experimental shard_map on 0.4.x.
+
+    `axis_names` selects the *manual* axes (None = all); on old jax the
+    complement is passed as `auto` and `check_vma` maps to `check_rep`
+    (must be False when mixing Manual with Auto axes -- DESIGN.md §9).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    manual = frozenset(axis_names) if axis_names is not None else \
+        frozenset(mesh.axis_names)
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma) and not auto, auto=auto)

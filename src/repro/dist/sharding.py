@@ -1,0 +1,200 @@
+"""Logical-axis -> mesh sharding rules (GSPMD side of the recipe).
+
+Models annotate every parameter with *logical* axis names
+(models/param.py) and never mention mesh axes. This module owns the
+mapping onto a ('pod', 'data', 'model') mesh:
+
+  * tensor-parallel names -> 'model': the highest-priority divisible
+    name wins (priority: mlp > heads > kv_heads > vocab > expert >
+    embed > embed2, i.e. wide contraction-free dims first, Megatron
+    column/row style); every other dim replicates. One mesh axis is
+    never assigned to two tensor dims.
+  * 'batch' -> all data-parallel axes present ('pod' outer, 'data'
+    inner) when the dim is divisible by the total DP world size,
+    replicated otherwise.
+  * 'seq'   -> 'model' (sequence parallelism between layers) when
+    divisible and 'model' is still unused; applied by
+    `make_act_constraint`.
+
+Rules degrade to replication instead of erroring: the same model code
+must lower on a 512-chip production mesh and an 8-fake-device test mesh
+(smoke dims rarely divide evenly). KV caches (`cache_shardings`) are
+positional -- batch dim -> DP axes, sequence dim -> 'model' (DESIGN.md
+§4) -- because cache pytrees carry no logical annotations.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+from repro.dist import compat
+
+# Wide, contraction-free dims first; 'embed' last so ("embed", "mlp")
+# shards the MLP dim (column parallel) and the matching ("mlp", "embed")
+# down-projection shards its *input* dim (row parallel) -- activations
+# then need exactly one collective per MLP pair, Megatron-style.
+_TP_PRIORITY = ("mlp", "heads", "kv_heads", "vocab", "expert", "embed",
+                "embed2")
+
+
+def _sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """All batch-parallel axes present in the mesh ('pod' is outer DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    sizes = _sizes(mesh)
+    n = 1
+    for a in data_axes(mesh):
+        n *= sizes[a]
+    return n
+
+
+def logical_to_spec(logical_axes, shape, mesh) -> P:
+    """Map a tuple of logical axis names onto a PartitionSpec for `shape`.
+
+    `mesh` only needs `.axis_names` and a dict-like `.shape` (tests pass
+    a plain stand-in object).
+    """
+    sizes = _sizes(mesh)
+    names = tuple(mesh.axis_names)
+    la = tuple(logical_axes) + (None,) * (len(shape) - len(logical_axes))
+    entries: list = [None] * len(shape)
+    used: set[str] = set()
+
+    # batch -> (pod, data), first batch dim only, all-or-nothing
+    dps = data_axes(mesh)
+    dp = dp_size(mesh)
+    for i, (name, dim) in enumerate(zip(la, shape)):
+        if name == "batch" and dps and dp > 1 and dim % dp == 0:
+            entries[i] = dps if len(dps) > 1 else dps[0]
+            used.update(dps)
+            break
+
+    # tensor parallelism -> 'model', single highest-priority divisible dim
+    model = sizes.get("model", 0)
+    if "model" in names and model > 1 and "model" not in used:
+        best_i, best_rank = -1, len(_TP_PRIORITY)
+        for i, (name, dim) in enumerate(zip(la, shape)):
+            if entries[i] is not None or name not in _TP_PRIORITY:
+                continue
+            if dim % model != 0:
+                continue
+            rank = _TP_PRIORITY.index(name)
+            if rank < best_rank:
+                best_i, best_rank = i, rank
+        if best_i >= 0:
+            entries[best_i] = "model"
+            used.add("model")
+
+    # sequence parallelism: 'seq' -> 'model' if still free
+    if "model" in names and model > 1 and "model" not in used:
+        for i, (name, dim) in enumerate(zip(la, shape)):
+            if name == "seq" and entries[i] is None and dim % model == 0:
+                entries[i] = "model"
+                used.add("model")
+                break
+
+    return P(*entries)
+
+
+def param_specs(axes, params, mesh):
+    """PartitionSpec tree for a param pytree given its logical-axes tree.
+
+    `axes` mirrors `params` container-for-container with tuple leaves
+    (the shape model.init returns), so it is flattened *up to* the param
+    tree's leaf positions rather than fully (tuples are pytrees too).
+    Pure logic -- `mesh` can be any object with axis_names + dict shape.
+    """
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_a = treedef.flatten_up_to(axes)
+    return treedef.unflatten([logical_to_spec(a, p.shape, mesh)
+                              for a, p in zip(flat_a, flat_p)])
+
+
+def param_shardings(axes, params, mesh):
+    """NamedShardings for a param pytree (requires a real device mesh)."""
+    specs = param_specs(axes, params, mesh)
+    flat_s, treedef = jax.tree.flatten(specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+    return treedef.unflatten([NamedSharding(mesh, s) for s in flat_s])
+
+
+def _positional_spec(shape, offset: int, mesh) -> P:
+    """batch dim at `offset` -> DP axes, next (sequence) dim -> 'model'."""
+    sizes = _sizes(mesh)
+    entries: list = [None] * len(shape)
+    dps = data_axes(mesh)
+    dp = dp_size(mesh)
+    if len(shape) > offset and dps and dp > 1 and shape[offset] % dp == 0:
+        entries[offset] = dps if len(dps) > 1 else dps[0]
+    model = sizes.get("model", 0)
+    if ("model" in mesh.axis_names and model > 1
+            and len(shape) > offset + 1 and shape[offset + 1] % model == 0):
+        entries[offset + 1] = "model"
+    return P(*entries)
+
+
+def cache_specs(cache, mesh):
+    """PartitionSpec tree for a KV-cache pytree (serve/decode path).
+
+    Cache leaves are positional: (batch, seq, ...) normally, with one
+    extra leading layer-group dim under the "stack" key when the model
+    runs scan-over-layers (models/stacking.py). batch -> DP axes, cache
+    sequence dim -> 'model' (2D cache sharding, DESIGN.md §4); the
+    layer-group dim always replicates (it is the scan axis).
+    """
+    def one(path, x):
+        stacked = bool(path) and isinstance(path[0], DictKey) \
+            and path[0].key == "stack"
+        return _positional_spec(x.shape, 1 if stacked else 0, mesh)
+    return tree_map_with_path(one, cache)
+
+
+def cache_shardings(cache, mesh):
+    """NamedShardings for a KV-cache pytree (requires a real device mesh)."""
+    specs = cache_specs(cache, mesh)
+    flat_s, treedef = jax.tree.flatten(specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+    return treedef.unflatten([NamedSharding(mesh, s) for s in flat_s])
+
+
+def make_act_constraint(mesh, *, seq_parallel: bool = True
+                        ) -> Callable | None:
+    """Activation sharding constraint injected between model layers.
+
+    Returns f(x) -> x with a with_sharding_constraint attached: batch
+    dim over the DP axes and -- when `seq_parallel` -- the sequence dim
+    over 'model', so layer boundaries stay sequence-sharded and GSPMD
+    places the all-gather/reduce-scatter pair around attention/MLP
+    instead of keeping full activations per chip. Non-divisible dims
+    replicate (decode steps have seq=1). Arrays below rank 2 (scalars,
+    per-token aux losses) pass through untouched.
+    """
+    if getattr(mesh, "size", 2) <= 1:
+        return lambda x: x
+
+    def constrain(x):
+        if getattr(x, "ndim", 0) < 2:
+            return x
+        # inside a shard_map region (hier train step: manual 'pod') a
+        # constraint naming auto axes trips the XLA SPMD partitioner's
+        # Manual-subgroup CHECK (DESIGN.md §8b) -- let GSPMD place the
+        # inner region freely instead
+        if compat.manual_axis_names():
+            return x
+        la = ["batch"] + [None] * (x.ndim - 1)
+        if seq_parallel and x.ndim >= 3:
+            la[1] = "seq"
+        spec = logical_to_spec(tuple(la), x.shape, mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return constrain

@@ -26,7 +26,9 @@ NEG_INF = -1e30
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   block_q: int, block_k: int, causal: bool):
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32)                  # (bq, D); block (1,bq,D)
+    # int ref-indexing (q_ref[0]) breaks interpret-mode discharge on some
+    # jax versions; load the (1, bq, D) block and drop the unit dim after
+    q = q_ref[...][0].astype(jnp.float32)             # (bq, D); block (1,bq,D)
     D = q.shape[-1]
     scale = 1.0 / jnp.sqrt(jnp.float32(D))
     S = k_ref.shape[1]
@@ -42,9 +44,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
 
     def body(kt, _):
-        k = pl.load(k_ref, (0, pl.dslice(kt * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(kt * block_k, block_k), slice(None)))
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(kt * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(kt * block_k, block_k),
+                            slice(None)))[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if causal:
@@ -63,8 +66,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         return ()
 
     jax.lax.fori_loop(0, n_valid, body, ())
-    o_ref[0] = (acc_ref[...] /
-                jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+    o_ref[...] = (acc_ref[...] /
+                  jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal",

@@ -30,7 +30,7 @@ from repro.analysis import hlo as hlo_mod
 from repro.analysis import roofline as roof_mod
 from repro.configs import SHAPES, get_config
 from repro.core.policy import get_policy
-from repro.dist import sharding as shard_rules
+from repro.dist import compat, sharding as shard_rules
 from repro.launch import inputs as inputs_mod
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
@@ -109,7 +109,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, policy_name: str,
         microbatch = max(1, min(8, local_b // 2))
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             lowered, mode = _lower_train(model, cfg, shape, mesh, hier,
                                          microbatch), "train"
@@ -121,7 +121,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, policy_name: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     ma = compiled.memory_analysis()
     hlo_text = compiled.as_text()
     colls = hlo_mod.collective_bytes(hlo_text)

@@ -11,23 +11,24 @@ Multi-pod:   (pod=2, data=16, model=16)     = 512 chips; `pod` is the outer
 """
 from __future__ import annotations
 
-import jax
+from repro.dist import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (tests use small fake-device meshes)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple[str, ...]:
-    """All batch-parallel axes present in the mesh ('pod' is outer DP)."""
-    names = mesh.axis_names
-    return tuple(a for a in ("pod", "data") if a in names)
+    """All batch-parallel axes present in the mesh ('pod' is outer DP).
+
+    Single source of truth lives in the distribution layer.
+    """
+    from repro.dist.sharding import data_axes as _data_axes
+    return _data_axes(mesh)

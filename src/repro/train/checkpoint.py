@@ -27,12 +27,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import compat
+
 _FP8_DTYPES = {"float8_e4m3fn": jnp.float8_e4m3fn,
                "float8_e5m2": jnp.float8_e5m2}
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = compat.tree_flatten_with_path(tree)
     paths = ["/".join(str(p) for p in kp) for kp, _ in flat]
     leaves = [l for _, l in flat]
     return paths, leaves, treedef

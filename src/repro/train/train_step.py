@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.dist import grad_comm, sharding as shard_rules
+from repro.dist import compat, grad_comm, sharding as shard_rules
 from repro.optim import adam as adam_mod
 from repro.optim.schedule import warmup_cosine
 
@@ -131,10 +131,10 @@ def make_hier_train_step(model, mesh, *, adam_cfg=None,
         out_specs = (state_specs, jax.tree.map(lambda _: P(),
                                                {"lm_loss": 0, "aux_loss": 0,
                                                 "grad_norm": 0, "loss": 0}))
-        fn = jax.shard_map(per_pod, mesh=mesh, in_specs=(state_specs,
-                                                         batch_specs),
-                           out_specs=out_specs, axis_names={"pod"},
-                           check_vma=False)
+        fn = compat.shard_map(per_pod, mesh=mesh,
+                              in_specs=(state_specs, batch_specs),
+                              out_specs=out_specs, axis_names={"pod"},
+                              check_vma=False)
         return fn(state, batch)
 
     return train_step

@@ -15,7 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.core.policy import FP4_PAPER
-from repro.dist import sharding as shard_rules
+from repro.dist import compat, sharding as shard_rules
 from repro.launch.inputs import make_batch
 from repro.launch.mesh import make_mesh
 from repro.models import build_model
@@ -45,7 +45,7 @@ def check_sharded_train_step():
                                         *([None] * (x.ndim - 1)))), batch)
     batch = jax.device_put(batch, bshard)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step = jax.jit(ts_mod.make_train_step(model, mesh),
                        in_shardings=(shardings, bshard))
         new_state, metrics = step(state, batch)
@@ -72,7 +72,7 @@ def check_hier_fp8_grad_comm():
     state = {"params": params, "opt": adam_mod.init_state(params, adam_cfg),
              "step": jnp.zeros((), jnp.int32)}
     batch = make_batch(cfg, 32, 8)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         plain = jax.jit(ts_mod.make_train_step(model, mesh))
         _, metrics = plain(state, batch)
         loss_plain = float(metrics["loss"])
@@ -121,12 +121,12 @@ def check_mini_dryrun():
     shardings = ts_mod.state_shardings(state_struct, box["axes"], mesh)
     batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
     bshard = {"tokens": NamedSharding(mesh, P("data", None))}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step = ts_mod.make_train_step(model, mesh, microbatch=2)
         lowered = jax.jit(step, in_shardings=(shardings, bshard),
                           donate_argnums=0).lower(state_struct, batch)
         compiled = lowered.compile()
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     assert ca.get("flops", 0) > 0
     ma = compiled.memory_analysis()
     assert ma.argument_size_in_bytes > 0
@@ -143,7 +143,7 @@ def check_mini_dryrun():
                                          model.init(jax.random.PRNGKey(0))[1],
                                          params_struct, mesh)
     tok = jax.ShapeDtypeStruct((8, 1), jnp.int32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         dec = jax.jit(model.decode_step,
                       in_shardings=(pshard, cshard,
                                     NamedSharding(mesh, P("data", None)),

@@ -1,0 +1,26 @@
+"""Shared pytest setup.
+
+* Puts `src/` on sys.path so `python -m pytest` works without a manual
+  PYTHONPATH (the tier-1 command in ROADMAP.md keeps setting it; both
+  work).
+* Puts the tests dir itself on sys.path so test modules can import the
+  `_hypothesis_shim` fallback regardless of pytest import mode.
+* Registers the `slow` marker used by the multi-device subprocess
+  harnesses (tests/test_distribution.py), so `-m "not slow"` selects the
+  fast tier and no PytestUnknownMarkWarning fires.
+"""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+for _p in (os.path.join(_HERE, os.pardir, "src"), _HERE):
+    _p = os.path.abspath(_p)
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-device subprocess harnesses "
+        "(deselect with -m \"not slow\")")

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # property tests prefer real hypothesis (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback engine
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import dge, formats, quantize
 

@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+try:  # property tests prefer real hypothesis (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:  # bare env: deterministic fallback engine
+    from _hypothesis_shim import given, hnp, settings, st
 
 from repro.core import formats, quantize
 

@@ -1,0 +1,188 @@
+"""Property tests for the fp8 gradient-comm path (repro.dist.grad_comm).
+
+In-process: round-trip error bounds for the per-tensor-scaled e4m3
+compress/decompress across magnitudes, zeros, and outlier-heavy
+gradients (hypothesis with the optional-dep fallback shim), plus a
+shared-scale multi-pod mean simulation. Multi-device: a subprocess with
+--xla_force_host_platform_device_count=8 runs fp8_allreduce_mean /
+bf16_allreduce_mean under jax.shard_map and checks them against an
+exact ml_dtypes reference and the analytic bound (jax locks the device
+count at first init, so the shared pytest process stays at 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property tests prefer real hypothesis (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:  # bare env: deterministic fallback engine
+    from _hypothesis_shim import given, hnp, settings, st
+
+from repro.dist import grad_comm
+
+# e4m3: 3 mantissa bits -> half-ulp <= 2^-4 relative for normals; the
+# subnormal floor in scaled space is 2^-10, i.e. amax * 2^-10 / 448
+# absolute after unscaling. Tiny slack for the f32 scale itself.
+def _roundtrip_bound(x, amax):
+    return 0.0625 * np.abs(x) + 2.4e-6 * amax + 1e-30
+
+
+def _finite_grads():
+    return hnp.arrays(
+        np.float32,
+        hnp.array_shapes(min_dims=1, max_dims=2, min_side=1, max_side=64),
+        elements=st.floats(-1e4, 1e4, width=32, allow_nan=False),
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(_finite_grads())
+def test_fp8_roundtrip_error_bounded(x):
+    q, s = grad_comm.fp8_compress(jnp.asarray(x))
+    assert q.dtype == jnp.float8_e4m3fn
+    back = np.asarray(grad_comm.fp8_decompress(q, s))
+    amax = float(np.max(np.abs(x))) if x.size else 0.0
+    assert np.all(np.abs(back - x) <= _roundtrip_bound(x, amax))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_finite_grads())
+def test_fp8_compress_never_overflows(x):
+    q, s = grad_comm.fp8_compress(jnp.asarray(x))
+    back = np.asarray(q, dtype=np.float32)
+    assert np.all(np.isfinite(back))
+    assert np.all(np.abs(back) <= grad_comm.E4M3_MAX)
+
+
+def test_fp8_zeros_exact():
+    q, s = grad_comm.fp8_compress(jnp.zeros((16, 16)))
+    assert float(s) == 1.0
+    np.testing.assert_array_equal(np.asarray(grad_comm.fp8_decompress(q, s)),
+                                  0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_finite_grads(), st.floats(1e-6, 1e6, allow_nan=False))
+def test_fp8_shared_scale_multipod_mean(x, pod_scale):
+    """Simulated K-pod sync: per-pod grads differ in magnitude, the
+    shared (pmax) scale keeps every pod on one grid; mean error obeys
+    the elementwise round-trip bound of the worst pod."""
+    K = 4
+    pods = [x * (pod_scale ** (k / (K - 1) - 0.5)) for k in range(K)]
+    amax = max(float(np.max(np.abs(p))) for p in pods) if x.size else 0.0
+    outs = []
+    for p in pods:
+        q, s = grad_comm.fp8_compress(jnp.asarray(p),
+                                      amax=jnp.float32(amax))
+        outs.append(np.asarray(grad_comm.fp8_decompress(q, s)))
+    got = np.mean(outs, axis=0)
+    want = np.mean(pods, axis=0)
+    bound = np.mean([_roundtrip_bound(p, amax) for p in pods], axis=0)
+    assert np.all(np.abs(got - want) <= bound)
+
+
+def test_fp8_outlier_heavy_gradient():
+    # one huge coordinate swamps the shared scale; the rest must still
+    # come back within the amax-relative subnormal floor, not explode
+    x = np.full((1024,), 1e-3, np.float32)
+    x[7] = 1e4
+    q, s = grad_comm.fp8_compress(jnp.asarray(x))
+    back = np.asarray(grad_comm.fp8_decompress(q, s))
+    assert abs(back[7] - 1e4) <= 0.0625 * 1e4
+    assert np.all(np.abs(back - x) <= _roundtrip_bound(x, 1e4))
+
+
+def test_allreduce_mean_single_axis_tracing():
+    """Wiring check on a 1-device mesh: shard_map axis of size 1 makes
+    both reduces equal the per-tensor round trip."""
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import compat
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("pod",))
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .normal(size=(8, 16)).astype(np.float32))}
+
+    def run(comm_fn):
+        f = compat.shard_map(lambda t: comm_fn(t, "pod"), mesh=mesh,
+                             in_specs=(jax.tree.map(lambda _: P(), g),),
+                             out_specs=jax.tree.map(lambda _: P(), g))
+        return np.asarray(f(g)["w"])
+
+    amax = float(np.max(np.abs(g["w"])))
+    got8 = run(grad_comm.fp8_allreduce_mean)
+    assert np.all(np.abs(got8 - np.asarray(g["w"]))
+                  <= _roundtrip_bound(np.asarray(g["w"]), amax))
+    got16 = run(grad_comm.bf16_allreduce_mean)
+    np.testing.assert_allclose(got16, np.asarray(g["w"]), rtol=8e-3)
+
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {src!r})
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import compat, grad_comm
+from repro.launch.mesh import make_mesh
+
+K = 8
+rng = np.random.default_rng(42)
+# outlier-heavy, per-pod magnitude spread
+x = rng.normal(size=(K, 4, 16)).astype(np.float32)
+x *= np.logspace(-2, 2, K, dtype=np.float32)[:, None, None]
+x[0, 0, 0] = 1e4
+
+mesh = make_mesh((K,), ("pod",))
+flat = jnp.asarray(x.reshape(K * 4, 16))  # shard_map splits dim 0
+
+def per_pod(fn):
+    f = compat.shard_map(lambda g: fn(g, "pod"), mesh=mesh,
+                         in_specs=(P("pod"),), out_specs=P())
+    return np.asarray(jax.jit(f)(flat))
+
+got8 = per_pod(grad_comm.fp8_allreduce_mean)
+got16 = per_pod(grad_comm.bf16_allreduce_mean)
+
+# independent reference of the wire algorithm via ml_dtypes; XLA CPU
+# converts through f16 (double rounding) so allow one e4m3 ulp per pod
+amax = np.max(np.abs(x))
+scale = np.float32(448.0) / amax
+deq = (x * scale).astype(ml_dtypes.float8_e4m3fn).astype(np.float32)
+want8 = deq.sum(0) / (scale * K)
+ulp = np.mean(0.125 * np.abs(x) + 5e-6 * amax, axis=0)
+assert np.all(np.abs(got8 - want8) <= ulp), "fp8 mean != wire reference"
+
+want = x.astype(np.float64).mean(0).astype(np.float32)
+bound = np.mean(0.0625 * np.abs(x) + 2.4e-6 * amax, axis=0)
+assert np.all(np.abs(got8 - want) <= bound), "fp8 mean outside bound"
+
+# bf16 arm: psum accumulates in bf16 in XLA, so bound analytically
+# (cast error + up to 7 bf16 adds) instead of matching a summation order
+tol16 = 2.0 ** -5 * np.abs(x).sum(0) / K + 1e-8
+assert np.all(np.abs(got16 - want) <= tol16), "bf16 mean outside bound"
+print("GRAD_COMM_OK")
+"""
+
+
+def test_fp8_allreduce_shard_map_8_fake_devices():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                       os.pardir, "src"))
+    proc = subprocess.run([sys.executable, "-c", _CHILD.format(src=src)],
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, \
+        f"child failed:\nstdout:\n{proc.stdout[-2000:]}\n" \
+        f"stderr:\n{proc.stderr[-2000:]}"
+    assert "GRAD_COMM_OK" in proc.stdout

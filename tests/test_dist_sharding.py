@@ -1,0 +1,211 @@
+"""Fast, device-free unit tests for the repro.dist sharding rules:
+param_specs/param_shardings, cache_specs/cache_shardings, and
+make_act_constraint -- divisibility edge cases, replication fallbacks,
+and the one-mesh-axis-never-assigned-twice invariant, beyond the
+logical_to_spec contract checks in test_distribution.py."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shard_rules
+
+
+class FakeMesh:
+    """Pure-logic mesh stand-in (no devices needed)."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+        self.size = int(np.prod(list(axes.values()))) if axes else 1
+
+
+MESH3 = FakeMesh(pod=2, data=4, model=4)
+MESH2 = FakeMesh(data=8, model=4)
+
+
+def _flat_axes(spec):
+    out = []
+    for e in spec:
+        if e is None:
+            continue
+        out.extend(e if isinstance(e, tuple) else (e,))
+    return out
+
+
+# ---------------------------------------------------------------- rules
+
+def test_tp_priority_mlp_over_embed_both_directions():
+    # column-parallel up-projection and row-parallel down-projection both
+    # shard the *mlp* dim, never embed -- one collective per MLP pair
+    assert shard_rules.logical_to_spec(("embed", "mlp"), (64, 256), MESH3) \
+        == P(None, "model")
+    assert shard_rules.logical_to_spec(("mlp", "embed"), (256, 64), MESH3) \
+        == P("model", None)
+
+
+def test_tp_falls_back_down_priority_on_divisibility():
+    # heads=6 not divisible by model=4 -> embed (divisible) takes 'model'
+    spec = shard_rules.logical_to_spec(("embed", "heads"), (64, 6), MESH3)
+    assert spec == P("model", None)
+    # nothing divisible -> fully replicated
+    spec = shard_rules.logical_to_spec(("embed", "heads"), (6, 6), MESH3)
+    assert spec == P(None, None)
+
+
+def test_batch_requires_full_dp_divisibility():
+    # dp world = pod*data = 8; batch=12 is divisible by 4 but not 8 ->
+    # replicate (no partial assignment of just one DP axis)
+    spec = shard_rules.logical_to_spec(("batch", None), (12, 16), MESH3)
+    assert spec[0] is None
+    spec = shard_rules.logical_to_spec(("batch", None), (16, 16), MESH3)
+    assert spec[0] == ("pod", "data")
+
+
+def test_batch_single_dp_axis_mesh():
+    # no 'pod' axis -> plain 'data' entry, not a 1-tuple
+    spec = shard_rules.logical_to_spec(("batch", None), (16, 16), MESH2)
+    assert spec[0] == "data"
+
+
+def test_seq_takes_model_only_when_free():
+    spec = shard_rules.logical_to_spec(("batch", "seq", None),
+                                       (16, 128, 64), MESH3)
+    assert spec == P(("pod", "data"), "model", None)
+    # decode step: seq=1 not divisible -> replicated
+    spec = shard_rules.logical_to_spec(("batch", "seq", None),
+                                       (16, 1, 64), MESH3)
+    assert spec[1] is None
+    # a TP name already claimed 'model' -> seq must not reuse it
+    spec = shard_rules.logical_to_spec(("seq", "mlp"), (128, 256), MESH3)
+    assert list(spec).count("model") == 1
+
+
+def test_no_mesh_axis_assigned_twice_exhaustive():
+    names = ["mlp", "heads", "kv_heads", "vocab", "embed", "embed2",
+             "expert", "batch", "seq", "layer", None]
+    dims = [1, 4, 6, 16, 64]
+    for la in itertools.product(names, repeat=2):
+        for shape in itertools.product(dims, repeat=2):
+            spec = shard_rules.logical_to_spec(la, shape, MESH3)
+            flat = _flat_axes(spec)
+            assert len(flat) == len(set(flat)), (la, shape, spec)
+            # every assignment must divide its dim
+            for d, e in zip(shape, spec):
+                if e is None:
+                    continue
+                axes = e if isinstance(e, tuple) else (e,)
+                world = int(np.prod([MESH3.shape[a] for a in axes]))
+                assert d % world == 0, (la, shape, spec)
+
+
+def test_short_logical_axes_pad_with_replication():
+    # axes tuple shorter than the array rank (stacked scan params append
+    # a leading 'layer'): missing entries replicate
+    spec = shard_rules.logical_to_spec(("layer",), (8, 64, 256), MESH3)
+    assert spec == P(None, None, None)
+
+
+# --------------------------------------------------------- param trees
+
+def test_param_specs_nested_tree():
+    params = {
+        "embed": jax.ShapeDtypeStruct((128, 64), jnp.float32),
+        "stack": [{
+            "wi": jax.ShapeDtypeStruct((4, 64, 256), jnp.float32),
+            "wo": jax.ShapeDtypeStruct((4, 256, 64), jnp.float32),
+        }],
+        "ln_f": jax.ShapeDtypeStruct((64,), jnp.float32),
+    }
+    axes = {
+        "embed": ("vocab", "embed"),
+        "stack": [{
+            "wi": ("layer", "embed", "mlp"),
+            "wo": ("layer", "mlp", "embed"),
+        }],
+        "ln_f": (None,),
+    }
+    specs = shard_rules.param_specs(axes, params, MESH3)
+    assert specs["embed"] == P("model", None)           # vocab-parallel
+    assert specs["stack"][0]["wi"] == P(None, None, "model")
+    assert specs["stack"][0]["wo"] == P(None, "model", None)
+    assert specs["ln_f"] == P(None)
+
+
+def test_param_shardings_real_mesh_roundtrip():
+    # NamedSharding construction needs a real mesh; 1 device => axis
+    # sizes 1 => everything replicates, but tree plumbing is exercised
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32)}
+    shard = shard_rules.param_shardings({"w": ("embed", "mlp")}, params,
+                                        mesh)
+    assert isinstance(shard["w"], NamedSharding)
+    assert shard["w"].spec == P(None, None)
+
+
+# --------------------------------------------------------------- caches
+
+def _cache_leaf(*shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_cache_specs_unstacked():
+    cache = {"layers": [{
+        "k": _cache_leaf(16, 128, 4, 32),
+        "v": _cache_leaf(16, 128, 4, 32),
+        "kv_pos": _cache_leaf(16, 128, dtype=jnp.int32),
+    }]}
+    specs = shard_rules.cache_specs(cache, MESH3)
+    leaf = specs["layers"][0]
+    assert leaf["k"] == P(("pod", "data"), "model", None, None)
+    assert leaf["kv_pos"] == P(("pod", "data"), "model")
+
+
+def test_cache_specs_stacked_offset():
+    # scan-over-layers cache: leading layer-group dim must replicate and
+    # batch/seq rules shift right by one
+    cache = {
+        "stack": [{"k": _cache_leaf(6, 16, 128, 4, 32)}],
+        "rest": [{"k": _cache_leaf(16, 128, 4, 32)}],
+    }
+    specs = shard_rules.cache_specs(cache, MESH3)
+    assert specs["stack"][0]["k"] == P(None, ("pod", "data"), "model",
+                                       None, None)
+    assert specs["rest"][0]["k"] == P(("pod", "data"), "model", None, None)
+
+
+def test_cache_specs_replication_fallbacks():
+    # ssm conv buffer: seq-like dim 3 is not divisible -> replicated;
+    # odd batch -> replicated
+    cache = {"layers": [{
+        "conv_x": _cache_leaf(16, 3, 64, dtype=jnp.float32),
+        "state": _cache_leaf(5, 8, 64, dtype=jnp.float32),
+    }]}
+    specs = shard_rules.cache_specs(cache, MESH3)
+    assert specs["layers"][0]["conv_x"] == P(("pod", "data"), None, None)
+    assert specs["layers"][0]["state"] == P(None, "model", None)
+
+
+def test_cache_shardings_real_mesh():
+    mesh = jax.make_mesh((1,), ("data",))
+    cache = {"layers": [{"k": _cache_leaf(4, 8, 2, 4)}]}
+    shard = shard_rules.cache_shardings(cache, mesh)
+    assert isinstance(shard["layers"][0]["k"], NamedSharding)
+
+
+# ------------------------------------------------------ act constraints
+
+def test_act_constraint_identity_on_single_device_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    f = shard_rules.make_act_constraint(mesh)
+    x = jnp.ones((4, 8, 16))
+    assert f(x) is x
+
+
+def test_act_constraint_passes_low_rank_through():
+    f = shard_rules.make_act_constraint(FakeMesh(data=4, model=2))
+    s = jnp.float32(1.0)
+    assert f(s) is s  # scalars (aux losses) untouched, no spec built
