@@ -1,0 +1,70 @@
+"""Quant-health columns for the BENCH report (DESIGN.md §11).
+
+Runs the repro.obs collection pipeline over the same heavy-tailed
+activation tensor as quant_fidelity and over each FP4 format's weight
+path, emitting the health vocabulary the training JSONL uses:
+clamp_frac / residual_mass / underflow_frac / snr_db / scale range.
+This is the static counterpart of the per-step health log -- handy for
+eyeballing what "healthy" numbers look like before a long run.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import formats, occ, quantize
+
+
+def _activation_tensor(seed=0, shape=(2048, 1024)):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_t(3.0, size=shape), jnp.float32)
+    ch = rng.choice(shape[1], max(1, shape[1] // 50), replace=False)
+    return x.at[:, ch].mul(4.0)
+
+
+def _health(x, fmt, alpha):
+    """clamp+quantize x and harvest the obs record set on host."""
+    with obs.collect() as col:
+        xc, res = occ.clamp_and_residual(x, alpha)
+        obs.record_clamp(x, res)
+        q, scale = quantize.quantize(xc, axis=-1, fmt=fmt)
+        obs.record_scale("act", xc, scale, axis=-1)
+        obs.record_quant_error("act", xc, q, scale)
+        rec = col.harvest()
+    return {k: float(v) for k, v in jax.device_get(rec).items()}
+
+
+def run(csv_rows: list):
+    x = _activation_tensor()
+    print("\n# Quant-health vocabulary (obs pipeline, alpha=0.99)")
+    print(f"{'fmt':8s} {'clamp%':>8s} {'resid':>8s} {'undfl%':>8s} "
+          f"{'snr_db':>8s} {'scl_min':>9s} {'scl_max':>9s}")
+    for name, fmt in [("e2m1", formats.E2M1), ("e1m2", formats.E1M2)]:
+        t0 = time.time()
+        h = _health(x, fmt, 0.99)
+        us = (time.time() - t0) * 1e6
+        cf = h["clamp_frac"]
+        rm = h["residual_mass"]
+        uf = h["act/underflow_frac"]
+        snr = h["act/snr_db"]
+        smin, smax = h["act/scale_min"], h["act/scale_max"]
+        print(f"{name:8s} {100 * cf:8.3f} {rm:8.4f} {100 * uf:8.3f} "
+              f"{snr:8.2f} {smin:9.3g} {smax:9.3g}")
+        csv_rows.append((f"health/{name}_clamp_frac", us, f"{cf:.5f}"))
+        csv_rows.append((f"health/{name}_snr_db", 0.0, f"{snr:.3f}"))
+        csv_rows.append((f"health/{name}_underflow_frac", 0.0, f"{uf:.5f}"))
+        # healthy-tensor sanity: quantizing a well-scaled activation should
+        # clear the sentinel defaults (SentinelConfig) by a wide margin
+        assert snr > 6.0, snr
+        assert uf < 0.01, uf
+    # degenerate tensor: everything underflows -> underflow_frac == 1
+    tiny = jnp.full((64, 64), 1e-33, jnp.float32)
+    h = _health(tiny, formats.E2M1, 0.99)
+    assert h["act/underflow_frac"] == 1.0, h
+    csv_rows.append(("health/underflow_sentinel", 0.0,
+                     f"{h['act/underflow_frac']:.1f}"))
+    return None

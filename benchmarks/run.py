@@ -19,11 +19,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (convergence, kernel_bench, quant_fidelity,
-                            roofline_report, speedup_theory)
+                            quant_health, roofline_report, speedup_theory)
 
     csv_rows: list[tuple[str, float, str]] = []
     benches = {
         "quant_fidelity": lambda: quant_fidelity.run(csv_rows),
+        "quant_health": lambda: quant_health.run(csv_rows),
         "speedup_theory": lambda: speedup_theory.run(csv_rows),
         "kernel_bench": lambda: kernel_bench.run(csv_rows),
         "convergence": lambda: convergence.run(

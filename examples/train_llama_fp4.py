@@ -8,6 +8,19 @@ checkpointing with resume, NaN guards, straggler watchdog.
 ~100M params: d=512, L=8, ff=2048, vocab=32000 (tied). On CPU this runs a
 few hundred steps in minutes at seq 256 / batch 8 -- the shape of the real
 pretraining loop, scaled down.
+
+Quant-health logging (DESIGN.md §11): pass `--obs-log health.jsonl` to
+record per-step FP4 telemetry -- per-layer OCC clamp fraction and residual
+mass, quantization scale extrema and underflow counts, quantize/dequantize
+SNR, and the DGE forward/backward mismatch -- plus worst-site aggregates
+(`agg/min_snr_db`, `agg/max_clamp_frac`, ...). Each training step appends
+one JSON object to the log; read it back with `repro.obs.read_jsonl` or
+any `jq`-style tool. The flag also arms the activation-collapse sentinel:
+if clamp fraction / SNR trends breach the thresholds for `patience`
+consecutive steps, the trainer checkpoints and flips to a bf16-policy
+step function (events `collapse_trip` / `bf16_fallback` in the history).
+Telemetry needs the unrolled execution mode, so `--obs-log` forces
+`scan_layers=False` (fine at example scale; see DESIGN.md §11).
 """
 import argparse
 
@@ -18,6 +31,7 @@ from repro.configs import get_config
 from repro.core.policy import get_policy
 from repro.data.synthetic import DataConfig, SyntheticLM
 from repro.models import build_model
+from repro.obs import SentinelConfig
 from repro.optim import adam as adam_mod
 from repro.train import train_step as ts_mod
 from repro.train.trainer import Trainer, TrainerConfig
@@ -32,18 +46,28 @@ def main():
     ap.add_argument("--layers", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--obs-log", default=None, metavar="PATH",
+                    help="write per-step quant-health JSONL here and arm "
+                         "the collapse sentinel (DESIGN.md §11)")
     args = ap.parse_args()
 
+    obs_on = args.obs_log is not None
     cfg = get_config("llama2-400m").replace(
         n_layers=args.layers, d_model=args.d_model, n_heads=8, n_kv_heads=8,
         d_ff=args.d_model * 4, vocab_size=32000, tie_embeddings=True,
-        loss_chunk=128, remat=False, scan_layers=True)
+        loss_chunk=128, remat=False,
+        # per-layer telemetry requires the unrolled observability
+        # configuration (records inside lax.scan cannot be harvested)
+        scan_layers=not obs_on)
     policy = get_policy(args.policy)
+    if obs_on:
+        policy = policy.replace(obs_metrics=True)
     model = build_model(cfg, policy)
 
     params, _ = model.init(jax.random.PRNGKey(0))
     n_params = sum(p.size for p in jax.tree.leaves(params))
-    print(f"model: {n_params/1e6:.1f}M params, policy={args.policy}")
+    print(f"model: {n_params/1e6:.1f}M params, policy={args.policy}"
+          f"{' +obs' if obs_on else ''}")
 
     adam_cfg = adam_mod.AdamConfig()
     state = {"params": params, "opt": adam_mod.init_state(params, adam_cfg),
@@ -52,17 +76,39 @@ def main():
         model, None, adam_cfg=adam_cfg, total_steps=args.steps,
         peak_lr=3e-4), donate_argnums=0)
 
+    fallback_fn = None
+    if obs_on:
+        # the sentinel's escape hatch: same weights, quantization disabled
+        fb_model = build_model(cfg, policy.fallback())
+        fallback_fn = jax.jit(ts_mod.make_train_step(
+            fb_model, None, adam_cfg=adam_cfg, total_steps=args.steps,
+            peak_lr=3e-4), donate_argnums=0)
+
     data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
     trainer = Trainer(
         step_fn, state,
         batch_fn=lambda s: {"tokens": jnp.asarray(data.global_batch(s))},
         cfg=TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
-                          ckpt_every=100, log_every=20))
+                          ckpt_every=100, log_every=20,
+                          obs_jsonl=args.obs_log,
+                          sentinel=SentinelConfig() if obs_on else None),
+        fallback_step_fn=fallback_fn)
     history = trainer.run()
     losses = [h["loss"] for h in history if "loss" in h]
     print(f"steps run: {len(losses)}; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
     if trainer.watchdog.flagged:
         print(f"straggler steps flagged: {trainer.watchdog.flagged[:5]}")
+    if obs_on:
+        summ = trainer.obs_summary()
+        for key in ("agg/min_snr_db", "agg/max_clamp_frac",
+                    "agg/max_underflow_frac"):
+            if key in summ:
+                s = summ[key]
+                print(f"health {key}: p50={s['p50']:.3g} p95={s['p95']:.3g} "
+                      f"last={s['last']:.3g}")
+        if trainer.fallback_active:
+            print("collapse sentinel tripped -> bf16 fallback engaged")
+        print(f"quant-health log: {args.obs_log}")
 
 
 if __name__ == "__main__":

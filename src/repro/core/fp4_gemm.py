@@ -29,6 +29,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import dge as dge_mod
 from . import formats, quantize
 from .policy import QuantPolicy
@@ -50,6 +52,15 @@ def _quantize_weight(w: jnp.ndarray, policy: QuantPolicy):
         return w.astype(jnp.float32) * sw, sw
     else:
         raise ValueError(policy.w_quant)
+    if policy.obs_metrics and obs.active() is not None:
+        obs.record_scale("weight", w, sw, policy.w_axis)
+        obs.record_quant_error("weight", w, w_q, sw)
+        if policy.w_quant == "dge":
+            obs.record_dge(stop_grad(w_scaled), stop_grad(w_q),
+                           dge_mod.dge_derivative(stop_grad(w_scaled),
+                                                  policy.dge_k,
+                                                  policy.dge_clip,
+                                                  policy.fmt))
     return w_q, sw
 
 
@@ -64,6 +75,10 @@ def _quantize_act(a: jnp.ndarray, policy: QuantPolicy):
         a_q = a_scaled  # high-precision activation ("A8" arm)
     else:
         raise ValueError(policy.a_quant)
+    if policy.obs_metrics and obs.active() is not None and \
+            policy.a_quant != "none":
+        obs.record_scale("act", a, sa, policy.a_axis)
+        obs.record_quant_error("act", a, stop_grad(a_q), sa)
     return a_q, sa
 
 

@@ -14,37 +14,61 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import occ as occ_mod
 from .fp4_gemm import fp4_matmul
 from .policy import QuantPolicy
 
 
 def fp4_linear(a: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
-               *, policy: QuantPolicy) -> jnp.ndarray:
-    """a: (..., K), w: (K, N), optional bias (N,)."""
+               *, policy: QuantPolicy, name: str | None = None) -> jnp.ndarray:
+    """a: (..., K), w: (K, N), optional bias (N,).
+
+    `name` labels this GeMM site in the quant-health records when
+    `policy.obs_metrics` is on (auto-numbered "siteN" otherwise); it has
+    no effect on the computation.
+    """
     if not policy.enabled:
         y = jnp.matmul(a, w, preferred_element_type=jnp.float32)
         y = y.astype(policy.compute_dtype)
         return y + b.astype(y.dtype) if b is not None else y
 
-    if policy.occ and policy.a_quant != "none":
-        a_c, delta = occ_mod.clamp_and_residual(a, policy.occ_alpha,
-                                                policy.occ_threshold)
-        y = fp4_matmul(a_c, w, policy)
-        if policy.occ_comp == "dense":
-            comp = jnp.matmul(delta.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
-                              preferred_element_type=jnp.float32)
-            y = y + comp.astype(y.dtype)
-        elif policy.occ_comp == "channel":
-            k = max(1, int(math.ceil(policy.occ_channel_frac * w.shape[0])))
-            comp = occ_mod.channel_compensation(
-                delta.astype(jnp.bfloat16), w.astype(jnp.bfloat16), k)
-            y = y + comp.astype(y.dtype)
-        elif policy.occ_comp != "none":
-            raise ValueError(policy.occ_comp)
-    else:
-        y = fp4_matmul(a, w, policy)
+    with obs.site(name) if policy.obs_metrics else _NULL_CTX as rec:
+        if policy.occ and policy.a_quant != "none":
+            a_c, delta = occ_mod.clamp_and_residual(a, policy.occ_alpha,
+                                                    policy.occ_threshold)
+            if rec:
+                obs.record_clamp(jax.lax.stop_gradient(a),
+                                 jax.lax.stop_gradient(delta))
+            y = fp4_matmul(a_c, w, policy)
+            if policy.occ_comp == "dense":
+                comp = jnp.matmul(delta.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                                  preferred_element_type=jnp.float32)
+                y = y + comp.astype(y.dtype)
+            elif policy.occ_comp == "channel":
+                k = max(1, int(math.ceil(policy.occ_channel_frac * w.shape[0])))
+                comp = occ_mod.channel_compensation(
+                    delta.astype(jnp.bfloat16), w.astype(jnp.bfloat16), k)
+                y = y + comp.astype(y.dtype)
+            elif policy.occ_comp != "none":
+                raise ValueError(policy.occ_comp)
+        else:
+            y = fp4_matmul(a, w, policy)
 
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
+
+
+class _NullCtx:
+    """Stand-in for obs.site() when observability is off."""
+
+    def __enter__(self):
+        return False
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()

@@ -46,12 +46,24 @@ class QuantPolicy:
     # --- scope ---
     quantize_head: bool = False     # LM head stays high-precision by default
 
+    # --- observability (repro.obs; DESIGN.md §11) ---
+    # When True, the FP4 path records per-site quant-health metrics into
+    # the active obs collector and model.loss returns them under
+    # metrics["obs"]. Off by default: zero traced ops added.
+    obs_metrics: bool = False
+
     @property
     def compute_dtype(self):
         return _DTYPES[self.compute]
 
     def replace(self, **kw) -> "QuantPolicy":
         return dataclasses.replace(self, **kw)
+
+    def fallback(self) -> "QuantPolicy":
+        """The bf16 fallback arm the collapse sentinel flips to: FP4
+        disabled, everything else (compute dtype, head scope) unchanged.
+        Obs stays on so the health log shows the post-fallback regime."""
+        return self.replace(enabled=False)
 
 
 # --- preset experimental arms (paper Fig. 6) -------------------------------
@@ -68,6 +80,7 @@ TENSOR_WISE = QuantPolicy(w_axis=None, a_axis=None)          # Fig. 6d arm
 PRESETS: dict[str, QuantPolicy] = {
     "bf16": BF16,
     "fp4": FP4_PAPER,
+    "fp4_obs": FP4_PAPER.replace(obs_metrics=True),  # instrumented arm
     "fp4_int8": FP4_PAPER.replace(gemm_backend="int8"),
     "fp4_pallas": FP4_PAPER.replace(gemm_backend="pallas"),
     # beyond-paper TPU variants (§Perf hillclimb arms):

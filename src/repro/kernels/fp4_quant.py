@@ -47,6 +47,24 @@ def _quant_kernel(x_ref, q_ref, s_ref):
     s_ref[...] = scale.astype(s_ref.dtype)
 
 
+def quant_stats(x: jnp.ndarray, q: jnp.ndarray,
+                scale: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """Quant-health of one kernel invocation (pure jnp, computed *outside*
+    the Pallas/jit body so the scalars live at the caller's trace level):
+    dequantization MSE/SNR plus the per-row scale extrema and underflow
+    fraction. Feeds obs recording (kernels/ops.py) and BENCH columns."""
+    from repro import obs as _obs  # local: keep kernel import cost minimal
+
+    xf = x.astype(jnp.float32)
+    stats = _obs.quant_error_stats(xf, q.astype(jnp.float32) / scale)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    stats["scale_min"] = jnp.min(scale)
+    stats["scale_max"] = jnp.max(scale)
+    stats["underflow_frac"] = jnp.mean(
+        (amax <= _obs.UNDERFLOW_ABSMAX).astype(jnp.float32))
+    return stats
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def fp4_quant(x: jnp.ndarray, *, block_m: int = 256,
               interpret: bool = True):

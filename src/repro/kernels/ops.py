@@ -18,8 +18,20 @@ INTERPRET = jax.default_backend() == "cpu"
 
 
 def fp4_quantize(x: jnp.ndarray, block_m: int = 256):
-    """Token-wise E2M1 quantization: (M,K) -> (q, scale (M,1))."""
-    return _q.fp4_quant(x, block_m=block_m, interpret=INTERPRET)
+    """Token-wise E2M1 quantization: (M,K) -> (q, scale (M,1)).
+
+    When an obs collector is active, kernel quant-health stats (SNR, scale
+    extrema, underflow) are recorded under a "pallas_quant" site. The
+    stats are computed *outside* the jitted kernel so the recorded scalars
+    live at the caller's trace level (see repro/obs/collect.py).
+    """
+    q, s = _q.fp4_quant(x, block_m=block_m, interpret=INTERPRET)
+    from repro import obs
+    if obs.active() is not None:
+        with obs.site("pallas_quant"):
+            for key, val in _q.quant_stats(x, q, s).items():
+                obs.record(key, val)
+    return q, s
 
 
 def fp4_matmul_pallas(a_q: jnp.ndarray, w_q: jnp.ndarray,

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.linear import fp4_linear
 from repro.core.policy import QuantPolicy
 
@@ -55,9 +56,9 @@ def init_attn(pf: ParamFactory, cfg, layer: dict):
 def _qkv(p, x, cfg, layer, policy, positions):
     B, S, _ = x.shape
     dh = cfg.resolved_head_dim
-    q = fp4_linear(x, p["wq"], p.get("bq"), policy=policy)
-    k = fp4_linear(x, p["wk"], p.get("bk"), policy=policy)
-    v = fp4_linear(x, p["wv"], p.get("bv"), policy=policy)
+    q = fp4_linear(x, p["wq"], p.get("bq"), policy=policy, name="wq")
+    k = fp4_linear(x, p["wk"], p.get("bk"), policy=policy, name="wk")
+    v = fp4_linear(x, p["wv"], p.get("bv"), policy=policy, name="wv")
     q = q.reshape(B, S, cfg.n_heads, dh)
     k = k.reshape(B, S, cfg.n_kv_heads, dh)
     v = v.reshape(B, S, cfg.n_kv_heads, dh)
@@ -77,7 +78,7 @@ def attn_train(p, x, positions, cfg, layer, policy: QuantPolicy):
         window=layer.get("window"), softcap=cfg.attn_softcap,
         kv_chunk=cfg.attn_chunk)
     out = out.reshape(*x.shape[:2], -1)
-    return fp4_linear(out, p["wo"], policy=policy)
+    return fp4_linear(out, p["wo"], policy=policy, name="wo")
 
 
 def init_attn_cache(cfg, layer, batch: int, max_len: int):
@@ -117,7 +118,7 @@ def attn_prefill(p, x, positions, cache, cfg, layer, policy: QuantPolicy):
         window=layer.get("window"), softcap=cfg.attn_softcap,
         kv_chunk=cfg.attn_chunk)
     out = out.reshape(*x.shape[:2], -1)
-    y = fp4_linear(out, p["wo"], policy=policy)
+    y = fp4_linear(out, p["wo"], policy=policy, name="wo")
     return y, _ring_write(cache, k, v, positions)
 
 
@@ -137,7 +138,7 @@ def attn_decode(p, x, cache, pos, cfg, layer, policy: QuantPolicy):
         q, ck.astype(q.dtype), cv.astype(q.dtype), positions, cpos,
         causal=True, window=layer.get("window"), softcap=cfg.attn_softcap)
     out = out.reshape(B, 1, -1)
-    y = fp4_linear(out, p["wo"], policy=policy)
+    y = fp4_linear(out, p["wo"], policy=policy, name="wo")
     return y, {"k": ck, "v": cv, "kv_pos": cpos}
 
 
@@ -159,11 +160,11 @@ def init_ffn(pf: ParamFactory, cfg, d_ff: int | None = None, glu: bool = True):
 def ffn_apply(p, x, cfg, policy: QuantPolicy):
     act = ACTIVATIONS[cfg.act]
     if "wg" in p:
-        h = act(fp4_linear(x, p["wg"], policy=policy)) * \
-            fp4_linear(x, p["wu"], policy=policy)
+        h = act(fp4_linear(x, p["wg"], policy=policy, name="wg")) * \
+            fp4_linear(x, p["wu"], policy=policy, name="wu")
     else:
-        h = act(fp4_linear(x, p["wu"], policy=policy))
-    return fp4_linear(h, p["wd"], policy=policy)
+        h = act(fp4_linear(x, p["wu"], policy=policy, name="wu"))
+    return fp4_linear(h, p["wd"], policy=policy, name="wd")
 
 
 # ===========================================================================
@@ -228,7 +229,10 @@ def moe_apply(p, x, cfg, policy: QuantPolicy):
             fp4_linear(xb, wu, policy=policy)
         return fp4_linear(h, wd, policy=policy)
 
-    out_buf = jax.vmap(expert_ffn)(buf, p["wg"], p["wu"], p["wd"])  # (E,C,D)
+    # obs: expert GeMMs run under vmap -- their tracers must not leak into
+    # the harvest, so expert sites are not individually instrumented (§11).
+    with obs.suspended():
+        out_buf = jax.vmap(expert_ffn)(buf, p["wg"], p["wu"], p["wd"])  # (E,C,D)
     out_flat = out_buf.reshape(E * C, D)
     gathered = jnp.where(keep[:, None], out_flat[jnp.minimum(slot, E * C - 1)], 0.0)
     y = (gathered.reshape(T, K, D) * topv[..., None].astype(x.dtype)).sum(1)

@@ -28,6 +28,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.linear import fp4_linear
 from repro.core.policy import QuantPolicy
 
@@ -168,7 +169,10 @@ class CausalLM:
                 return (x, aux), None
 
             body = _remat(cfg)(group_body) if cfg.remat else group_body
-            (x, aux), _ = jax.lax.scan(body, (x, aux0), params["stack"])
+            # obs: scan-body tracers must not leak into the harvest --
+            # stacked layers are not individually instrumented (§11).
+            with obs.suspended():
+                (x, aux), _ = jax.lax.scan(body, (x, aux0), params["stack"])
             tail_params = params["rest"]
             tail_plan = self.plan[self._tail_start:]
         else:
@@ -176,12 +180,15 @@ class CausalLM:
             tail_params = params["layers"]
             tail_plan = self.plan
 
-        for p, layer in zip(tail_params, tail_plan):
+        for i, (p, layer) in enumerate(zip(tail_params, tail_plan)):
             def fn(p, shared_p, x, positions, _layer=layer):
                 return self._apply_train(p, shared_p, x, positions, _layer)
             if cfg.remat:
-                fn = _remat(cfg)(fn)
-            x, a = fn(p, shared_p, x, positions)
+                # remat regions are traced at an inner level; per-layer
+                # telemetry requires remat=False (the obs configuration).
+                fn = _remat(cfg)(obs.suppress(fn))
+            with obs.scope(f"L{self._tail_start + i}"):
+                x, a = fn(p, shared_p, x, positions)
             aux = aux + a
         return rms_norm(x, params["ln_f"], plus_one=cfg.norm_plus_one), aux
 
@@ -192,7 +199,11 @@ class CausalLM:
         B, S = x.shape[:2]
         positions = batch.get("positions",
                               jnp.arange(S, dtype=jnp.int32))
-        x, aux = self.backbone(params, x, positions)
+        # Quant-health collection (repro.obs): records made while tracing
+        # the backbone are harvested here, inside the same trace, and flow
+        # out through the aux metrics dict (survives jit / value_and_grad).
+        with obs.collect(enabled=self.policy.obs_metrics) as col:
+            x, aux = self.backbone(params, x, positions)
         head_w = self._head_w(params)
         tokens = batch["labels"] if cfg.frontend == "embeddings" else \
             batch["tokens"]
@@ -200,7 +211,10 @@ class CausalLM:
                             logit_softcap=cfg.final_softcap,
                             loss_mask=batch.get("loss_mask"))
         loss = lm + 0.01 * aux
-        return loss, {"lm_loss": lm, "aux_loss": aux}
+        metrics = {"lm_loss": lm, "aux_loss": aux}
+        if col is not None:
+            metrics["obs"] = col.harvest()
+        return loss, metrics
 
     # ----------------------------------------------------------------- serve
     def _init_one_cache(self, layer, batch_size, max_len):
@@ -272,17 +286,22 @@ class CausalLM:
                     new_c.append(c)
                 return x, new_c
 
-            x, new_stack = jax.lax.scan(step, x,
-                                        (params["stack"], cache["stack"]))
+            with obs.suspended():  # scan-body tracers must not escape
+                x, new_stack = jax.lax.scan(step, x,
+                                            (params["stack"], cache["stack"]))
             new_rest = []
-            for p, c, layer in zip(params["rest"], cache["rest"],
-                                   self.plan[self._tail_start:]):
-                x, c = apply_fn(p, shared_p, x, c, layer)
+            for i, (p, c, layer) in enumerate(zip(params["rest"],
+                                                  cache["rest"],
+                                                  self.plan[self._tail_start:])):
+                with obs.scope(f"L{self._tail_start + i}"):
+                    x, c = apply_fn(p, shared_p, x, c, layer)
                 new_rest.append(c)
             return x, {"stack": new_stack, "rest": new_rest}
         new_layers = []
-        for p, c, layer in zip(params["layers"], cache["layers"], self.plan):
-            x, c = apply_fn(p, shared_p, x, c, layer)
+        for i, (p, c, layer) in enumerate(zip(params["layers"],
+                                              cache["layers"], self.plan)):
+            with obs.scope(f"L{i}"):
+                x, c = apply_fn(p, shared_p, x, c, layer)
             new_layers.append(c)
         return x, {"layers": new_layers}
 
@@ -319,7 +338,7 @@ class CausalLM:
             def fn(p, sp, x, c, _layer=layer):
                 return self._apply_prefill(p, sp, x, c, positions, _layer)
             if cfg.remat:
-                fn = jax.checkpoint(fn)
+                fn = jax.checkpoint(obs.suppress(fn))
             return fn(p, sp, x, c)
 
         x, new_cache = self._run_serve(params, cache, x, apply_fn)

@@ -1,0 +1,27 @@
+"""repro.obs -- quantization-health observability (DESIGN.md §11).
+
+Three pieces:
+  * `collect`  -- jit-compatible trace-time metrics collection threaded
+                  through the FP4 compute path (clamp fraction, residual
+                  mass, scale extrema/underflow, quant SNR/MSE, DGE
+                  forward/backward mismatch);
+  * `sinks`    -- JSONL step-metrics writer + rolling percentile window;
+  * `sentinel` -- activation-collapse sentinel that trips on sustained
+                  unhealthy trends and drives the trainer's skip/
+                  checkpoint/bf16-fallback machinery.
+"""
+from .collect import (UNDERFLOW_ABSMAX, MetricsCollector, active, aggregate,
+                      collect, quant_error_stats, record, record_clamp,
+                      record_dge, record_quant_error, record_scale, scope,
+                      site, suppress, suspended)
+from .sentinel import CollapseSentinel, SentinelConfig, SentinelDecision
+from .sinks import JsonlWriter, RollingWindow, read_jsonl
+
+__all__ = [
+    "UNDERFLOW_ABSMAX", "MetricsCollector", "active", "aggregate", "collect",
+    "quant_error_stats", "record", "record_clamp", "record_dge",
+    "record_quant_error", "record_scale", "scope", "site", "suppress",
+    "suspended",
+    "CollapseSentinel", "SentinelConfig", "SentinelDecision",
+    "JsonlWriter", "RollingWindow", "read_jsonl",
+]

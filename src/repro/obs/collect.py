@@ -1,0 +1,269 @@
+"""Jit-compatible quantization-health metrics collection.
+
+The collector is a *trace-time* object: `obs.collect()` installs a
+thread-local `MetricsCollector`, the FP4 compute path (`core/linear.py`,
+`core/fp4_gemm.py`, `kernels/ops.py`) records per-site scalar statistics
+into it while the surrounding function is being traced, and the owner of
+the trace (`CausalLM.loss`, `serve.engine`) harvests the records *inside
+the same trace* and returns them as part of its metrics pytree. No host
+callbacks: the recorded values are ordinary traced f32 scalars, so the
+whole scheme survives `jit` (and rides through `value_and_grad` as aux
+outputs -- every record is `stop_gradient`ed).
+
+Trace-safety rule: a value recorded under an *inner* trace (lax.scan body,
+jax.checkpoint/remat region, vmap) must not be harvested outside it --
+that is an escaped tracer. Call sites that introduce inner traces suspend
+collection around them (`obs.suspended()` in `models/transformer.py` for
+the stacked-scan path and remat-wrapped layers, `models/blocks.py` around
+the MoE expert vmap). Net effect: full per-layer telemetry requires the
+unrolled, remat-off execution mode (the observability configuration used
+by smoke trains and CPU tests); production dry-runs keep obs off via
+`QuantPolicy.obs_metrics=False` (the default). See DESIGN.md §11.
+
+Metric vocabulary (leaf key -> meaning, paper grounding in DESIGN.md §11):
+    clamp_frac      fraction of activation elements moved by OCC clamping
+    residual_mass   |Delta|_1 / |A|_1 -- outlier mass routed to the
+                    compensation path (paper §3.2)
+    scale_min/max   per-tensor extrema of the absmax quantization scales
+    underflow_frac  fraction of quantization groups whose absmax is below
+                    the f32-safe floor (scale forced to 1; signal lost)
+    mse, snr_db     quantize->dequantize error vs the input tensor
+    dge_mismatch    ||Q(x) - x||_2 / ||x||_2 on the scaled weight -- the
+                    gap between the DGE hard forward and the identity its
+                    backward linearizes around (paper §3.1)
+    dge_fprime_mean mean DGE derivative f'(x) (1.0 == STE regime)
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+
+_STATE = threading.local()
+
+# absmax floor mirrored from core.quantize.absmax_scale: groups below it get
+# scale 1.0 (their content is not representable at 4 bits).
+UNDERFLOW_ABSMAX = 1e-30
+
+
+class MetricsCollector:
+    """Accumulates named scalar records during one trace."""
+
+    def __init__(self):
+        self._records: dict[str, jnp.ndarray] = {}
+        self._scopes: list[str] = []
+        self._auto_site = 0
+        self._suspended = 0
+
+    # ---------------------------------------------------------------- record
+    def next_site_name(self, name: str | None = None) -> str:
+        if name is not None:
+            return name
+        name = f"site{self._auto_site}"
+        self._auto_site += 1
+        return name
+
+    def record(self, key: str, value) -> None:
+        if self._suspended:
+            return
+        full = "/".join(self._scopes + [key])
+        self._records[full] = jax.lax.stop_gradient(
+            jnp.asarray(value, jnp.float32))
+
+    # --------------------------------------------------------------- harvest
+    def harvest(self) -> dict[str, jnp.ndarray]:
+        """Flat {key: f32 scalar} dict incl. cross-site aggregates. Must be
+        called at the same trace level the records were made at."""
+        out = dict(self._records)
+        out.update(aggregate(self._records))
+        return out
+
+
+# Aggregation op per metric leaf: the sentinel watches the *worst* site.
+_AGG_OPS = {
+    "clamp_frac": "max",
+    "residual_mass": "max",
+    "underflow_frac": "max",
+    "snr_db": "min",
+    "mse": "max",
+    "dge_mismatch": "max",
+    "scale_min": "min",
+    "scale_max": "max",
+}
+
+
+def aggregate(records: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+    """Worst-case-across-sites summaries ('agg/min_snr_db', ...)."""
+    groups: dict[str, list[jnp.ndarray]] = {}
+    for key, value in records.items():
+        leaf = key.rsplit("/", 1)[-1]
+        groups.setdefault(leaf, []).append(value)
+    out: dict[str, jnp.ndarray] = {}
+    for leaf, vals in groups.items():
+        op = _AGG_OPS.get(leaf)
+        if op is None:
+            continue
+        out[f"agg/{op}_{leaf}"] = getattr(jnp, op)(jnp.stack(vals))
+    if groups:
+        n = max(len(v) for v in groups.values())
+        out["agg/n_sites"] = jnp.float32(n)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Thread-local plumbing
+# ---------------------------------------------------------------------------
+
+def active() -> MetricsCollector | None:
+    """The installed collector, or None if absent/suspended."""
+    col = getattr(_STATE, "collector", None)
+    if col is None or col._suspended:
+        return None
+    return col
+
+
+@contextmanager
+def collect(enabled: bool = True):
+    """Install a fresh collector for the duration of the block. Yields the
+    collector (or None when disabled) -- harvest it before leaving the
+    trace that produced the records."""
+    if not enabled:
+        yield None
+        return
+    prev = getattr(_STATE, "collector", None)
+    col = MetricsCollector()
+    _STATE.collector = col
+    try:
+        yield col
+    finally:
+        _STATE.collector = prev
+
+
+@contextmanager
+def scope(name: str):
+    """Prefix records inside the block with `name/` (layers, sublayers)."""
+    col = getattr(_STATE, "collector", None)
+    if col is None:
+        yield
+        return
+    col._scopes.append(name)
+    try:
+        yield
+    finally:
+        col._scopes.pop()
+
+
+@contextmanager
+def site(name: str | None = None):
+    """Scope for one instrumented GeMM site; auto-numbered when unnamed.
+    Yields True when records will actually be kept."""
+    col = active()
+    if col is None:
+        yield False
+        return
+    with scope(col.next_site_name(name)):
+        yield True
+
+
+@contextmanager
+def suspended():
+    """No-op recording inside the block. Used around inner traces (scan,
+    remat, vmap) whose tracers must not leak into the harvest."""
+    col = getattr(_STATE, "collector", None)
+    if col is None:
+        yield
+        return
+    col._suspended += 1
+    try:
+        yield
+    finally:
+        col._suspended -= 1
+
+
+def suppress(fn):
+    """Wrap `fn` so it runs with recording suspended (for remat/scan
+    bodies that are traced at an inner level)."""
+    def wrapped(*args, **kwargs):
+        with suspended():
+            return fn(*args, **kwargs)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Recording helpers: each is a no-op (zero traced ops) when no collector is
+# active, so the instrumented hot path costs nothing with obs off.
+# ---------------------------------------------------------------------------
+
+def record(key: str, value) -> None:
+    col = active()
+    if col is not None:
+        col.record(key, value)
+
+
+def quant_error_stats(x: jnp.ndarray, x_hat: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """MSE and SNR (dB) of a reconstruction `x_hat` against `x`."""
+    a = x.astype(jnp.float32).reshape(-1)
+    b = x_hat.astype(jnp.float32).reshape(-1)
+    mse = jnp.mean((a - b) ** 2)
+    snr = 10.0 * jnp.log10(jnp.mean(a ** 2) / jnp.maximum(mse, 1e-20))
+    return {"mse": mse, "snr_db": snr}
+
+
+def record_clamp(x: jnp.ndarray, residual: jnp.ndarray) -> None:
+    """OCC health: how much of the tensor the clamp moved, and how much
+    mass the compensation path must carry."""
+    col = active()
+    if col is None:
+        return
+    r = residual.astype(jnp.float32)
+    col.record("clamp_frac", jnp.mean((r != 0).astype(jnp.float32)))
+    total = jnp.sum(jnp.abs(x.astype(jnp.float32))) + 1e-12
+    col.record("residual_mass", jnp.sum(jnp.abs(r)) / total)
+
+
+def record_scale(kind: str, x: jnp.ndarray, scale: jnp.ndarray,
+                 axis) -> None:
+    """Scale health for one quantized operand (`kind` in {'act','weight'}):
+    extrema of the absmax scales plus the underflow fraction."""
+    col = active()
+    if col is None:
+        return
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                   keepdims=axis is not None)
+    with scope(kind):
+        col.record("scale_min", jnp.min(scale))
+        col.record("scale_max", jnp.max(scale))
+        col.record("underflow_frac",
+                   jnp.mean((amax <= UNDERFLOW_ABSMAX).astype(jnp.float32)))
+
+
+def record_quant_error(kind: str, x: jnp.ndarray, x_q: jnp.ndarray,
+                       scale: jnp.ndarray) -> None:
+    """Quantize->dequantize fidelity of `x_q` (on-grid, scaled) vs `x`."""
+    col = active()
+    if col is None:
+        return
+    deq = x_q.astype(jnp.float32) / scale
+    stats = quant_error_stats(x, deq)
+    with scope(kind):
+        for k, v in stats.items():
+            col.record(k, v)
+
+
+def record_dge(w_scaled: jnp.ndarray, w_q: jnp.ndarray,
+               fprime: jnp.ndarray | None = None) -> None:
+    """DGE forward/backward mismatch: relative L2 gap between the hard
+    forward Q(x) and the scaled input the backward linearizes around."""
+    col = active()
+    if col is None:
+        return
+    a = w_scaled.astype(jnp.float32).reshape(-1)
+    b = w_q.astype(jnp.float32).reshape(-1)
+    denom = jnp.maximum(jnp.linalg.norm(a), 1e-12)
+    with scope("weight"):
+        col.record("dge_mismatch", jnp.linalg.norm(b - a) / denom)
+        if fprime is not None:
+            col.record("dge_fprime_mean",
+                       jnp.mean(fprime.astype(jnp.float32)))

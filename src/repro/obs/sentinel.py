@@ -1,0 +1,97 @@
+"""Activation-collapse sentinel.
+
+Watches the aggregated quant-health metrics emitted by `repro.obs.collect`
+and trips when the FP4 path shows a *sustained* collapse signature -- the
+failure modes the paper's stability mechanisms exist to prevent:
+
+  * quant SNR falling through the floor (absmax scale blown out by
+    outliers: the tensor body quantizes to zero -- paper §3.2 / Fig. 4),
+  * clamp fraction far above the 2*(1-alpha) the OCC quantile design
+    admits (threshold estimation broke down),
+  * residual mass dominating the tensor (the "compensated" path is now
+    carrying the signal; the FP4 GeMM computes noise),
+  * scale-group underflow (tokens/channels whose absmax is below the f32
+    floor -- they lost all signal).
+
+"FP4 All the Way" (Chmiel et al., 2025) observes these trends move steps
+*before* the loss does, which is the window in which skipping the update,
+checkpointing, and falling back to bf16 is still cheap. `patience`
+consecutive unhealthy steps are required (one outlier batch is not a
+collapse); `warmup_steps` observations are ignored while scales settle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelConfig:
+    min_snr_db: float = 6.0          # healthy E2M1 token-wise SNR is >~10 dB
+    max_clamp_frac: float = 0.25     # >> 2*(1-alpha) at alpha=0.99
+    max_underflow_frac: float = 0.01
+    max_residual_mass: float = 0.5   # compensation path carries the signal
+    max_dge_mismatch: float | None = None  # off by default (format-dependent)
+    patience: int = 2                # consecutive unhealthy steps to trip
+    warmup_steps: int = 2            # ignore the first N observations
+
+
+@dataclasses.dataclass
+class SentinelDecision:
+    tripped: bool
+    step: int
+    reasons: list[str]
+    streak: int
+
+
+class CollapseSentinel:
+    """Feed one aggregated obs record per step; returns a decision."""
+
+    def __init__(self, cfg: SentinelConfig | None = None):
+        self.cfg = cfg or SentinelConfig()
+        self.n_obs = 0
+        self.streak = 0
+        self.trips: list[SentinelDecision] = []
+
+    def _breaches(self, obs: dict) -> list[str]:
+        cfg = self.cfg
+        checks = [
+            ("agg/min_snr_db", lambda v: v < cfg.min_snr_db,
+             f"snr_db<{cfg.min_snr_db}"),
+            ("agg/max_clamp_frac", lambda v: v > cfg.max_clamp_frac,
+             f"clamp_frac>{cfg.max_clamp_frac}"),
+            ("agg/max_underflow_frac", lambda v: v > cfg.max_underflow_frac,
+             f"underflow_frac>{cfg.max_underflow_frac}"),
+            ("agg/max_residual_mass", lambda v: v > cfg.max_residual_mass,
+             f"residual_mass>{cfg.max_residual_mass}"),
+        ]
+        if cfg.max_dge_mismatch is not None:
+            checks.append(("agg/max_dge_mismatch",
+                           lambda v: v > cfg.max_dge_mismatch,
+                           f"dge_mismatch>{cfg.max_dge_mismatch}"))
+        reasons = []
+        for key, bad, label in checks:
+            v = obs.get(key)
+            if v is None:
+                continue
+            v = float(v)
+            # A non-finite health metric is itself a collapse signal.
+            if not math.isfinite(v) or bad(v):
+                reasons.append(f"{label} (got {v:.4g})")
+        return reasons
+
+    def observe(self, step: int, obs: dict) -> SentinelDecision:
+        self.n_obs += 1
+        if self.n_obs <= self.cfg.warmup_steps:
+            return SentinelDecision(False, step, [], 0)
+        reasons = self._breaches(obs)
+        if reasons:
+            self.streak += 1
+        else:
+            self.streak = 0
+        tripped = self.streak >= self.cfg.patience
+        decision = SentinelDecision(tripped, step, reasons, self.streak)
+        if tripped:
+            self.trips.append(decision)
+            self.streak = 0   # re-arm after the trip is acted upon
+        return decision

@@ -1,0 +1,95 @@
+"""Host-side sinks for quantization-health metrics.
+
+`JsonlWriter`   -- append-mode JSON-lines step-metrics log (one record per
+                   training/decode step; schema in DESIGN.md §11).
+`RollingWindow` -- bounded in-memory window with percentile summaries, the
+                   thing a dashboard (or the collapse sentinel's operator)
+                   reads without scanning the JSONL.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+
+import numpy as np
+
+
+class JsonlWriter:
+    """Append-only JSONL sink. Opens lazily, flushes every record (a
+    collapse postmortem must see the last pre-divergence step)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = None
+
+    def _ensure_open(self):
+        if self._f is None:
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._f = open(self.path, "a")
+        return self._f
+
+    def write(self, record: dict) -> None:
+        f = self._ensure_open()
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+        f.flush()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Load a health log back (tests, notebooks, postmortems)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+class RollingWindow:
+    """Last-N step records with percentile summaries per metric key."""
+
+    def __init__(self, size: int = 128):
+        self._buf: collections.deque[dict] = collections.deque(maxlen=size)
+
+    def push(self, record: dict) -> None:
+        self._buf.append(record)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def summary(self, keys: list[str] | None = None,
+                percentiles=(50.0, 95.0)) -> dict[str, dict]:
+        """{key: {p50, p95, min, max, last}} over the window. Non-numeric
+        record fields are skipped."""
+        if not self._buf:
+            return {}
+        if keys is None:
+            keys = sorted({k for rec in self._buf for k in rec
+                           if isinstance(rec[k], (int, float))})
+        out: dict[str, dict] = {}
+        for key in keys:
+            vals = [rec[key] for rec in self._buf
+                    if isinstance(rec.get(key), (int, float))]
+            if not vals:
+                continue
+            arr = np.asarray(vals, np.float64)
+            stats = {f"p{int(p)}": float(np.percentile(arr, p))
+                     for p in percentiles}
+            stats.update(min=float(arr.min()), max=float(arr.max()),
+                         last=float(arr[-1]))
+            out[key] = stats
+        return out

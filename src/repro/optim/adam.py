@@ -65,7 +65,10 @@ def init_state(params, cfg: AdamConfig):
     def one(p):
         z = jnp.zeros(p.shape, jnp.float32)
         return {
-            "master": p.astype(jnp.float32),
+            # copy=True: when p is already f32, a bare astype aliases the
+            # param buffer -- donating the state would then donate the same
+            # buffer twice (params.X and opt...X.master).
+            "master": jnp.array(p, jnp.float32, copy=True),
             "m": _store_m(z, cfg.m_dtype),
             "v": z.astype(cfg.v_dtype),
         }

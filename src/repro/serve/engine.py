@@ -12,14 +12,23 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.dist import sharding as shard_rules
 
 
 def make_serve_step(model, mesh):
+    """When `model.policy.obs_metrics` is on, the decode step additionally
+    returns a flat quant-health dict (same vocabulary as the train-side
+    metrics["obs"]; DESIGN.md §11) harvested inside the jitted step."""
+    obs_on = getattr(model.policy, "obs_metrics", False)
+
     def serve_step(params, cache, tokens, pos):
-        logits, cache = model.decode_step(params, cache, tokens, pos)
+        with obs.collect(enabled=obs_on) as col:
+            logits, cache = model.decode_step(params, cache, tokens, pos)
         # greedy sampling head (sampling params are a host concern)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if col is not None:
+            return next_tok, logits, cache, col.harvest()
         return next_tok, logits, cache
     return serve_step
 
@@ -32,8 +41,15 @@ def serve_shardings(model, params, cache, mesh):
 
 
 def greedy_generate(model, params, batch, steps: int, max_len: int,
-                    memory_len: int = 0):
-    """Host-side loop for examples/tests: prefill then `steps` decode steps."""
+                    memory_len: int = 0, obs_writer=None):
+    """Host-side loop for examples/tests: prefill then `steps` decode steps.
+
+    `obs_writer` (an `obs.JsonlWriter`-like object with .write(dict)) gets
+    one quant-health record per decode step when the model policy has
+    `obs_metrics=True`; without a writer the metrics are still computed
+    but dropped on the floor (decode health shows up in serve_step users).
+    """
+    obs_on = getattr(model.policy, "obs_metrics", False)
     B = next(iter(batch.values())).shape[0]
     if memory_len:
         cache = model.init_cache(B, max_len, memory_len=memory_len)
@@ -44,11 +60,27 @@ def greedy_generate(model, params, batch, steps: int, max_len: int,
         pos0 = batch["tokens"].shape[1]
     else:
         pos0 = batch["embeds"].shape[1]
-    step = jax.jit(model.decode_step)
+
+    if obs_on:
+        def _step(params, cache, tok, pos):
+            with obs.collect() as col:
+                logits, cache = model.decode_step(params, cache, tok, pos)
+            return logits, cache, col.harvest()
+        step = jax.jit(_step)
+    else:
+        step = jax.jit(model.decode_step)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
     for t in range(steps - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(pos0 + t))
+        if obs_on:
+            logits, cache, health = step(params, cache, tok,
+                                         jnp.int32(pos0 + t))
+            if obs_writer is not None:
+                host = {k: float(v) for k, v in
+                        jax.device_get(health).items()}
+                obs_writer.write({"decode_step": t, **host})
+        else:
+            logits, cache = step(params, cache, tok, jnp.int32(pos0 + t))
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         out.append(tok)
     return jnp.concatenate(out, axis=1)

@@ -63,8 +63,11 @@ def _loss_grads(model, params, batch, clip_norm, microbatch: int = 1):
         # bf16 accumulator: the paper's recipe keeps *gradients* in fp8
         # (FP8-LM); bf16 here is the conservative middle ground and halves
         # the accumulator footprint vs f32.
+        # Metrics accumulate generically (mean over microbatches) so extra
+        # keys -- e.g. the quant-health tree under metrics["obs"] when
+        # policy.obs_metrics is on -- ride along without a fixed template.
         loss = jnp.float32(0)
-        metrics = {"lm_loss": jnp.float32(0), "aux_loss": jnp.float32(0)}
+        metrics = None
         grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
                              params)
         for i in range(microbatch):
@@ -72,7 +75,9 @@ def _loss_grads(model, params, batch, clip_norm, microbatch: int = 1):
             (l, m), g = jax.value_and_grad(
                 lambda p: model.loss(p, mb), has_aux=True)(params)
             loss = loss + l / microbatch
-            metrics = jax.tree.map(lambda a, v: a + v / microbatch, metrics, m)
+            m_scaled = jax.tree.map(lambda v: v / microbatch, m)
+            metrics = m_scaled if metrics is None else jax.tree.map(
+                lambda a, v: a + v, metrics, m_scaled)
             grads = jax.tree.map(
                 lambda a, gg: a + gg.astype(jnp.bfloat16) / microbatch,
                 grads, g)
@@ -109,6 +114,13 @@ def make_hier_train_step(model, mesh, *, adam_cfg=None,
     """
     adam_cfg = adam_cfg or adam_mod.AdamConfig()
     assert "pod" in mesh.axis_names
+    if getattr(model.policy, "obs_metrics", False):
+        # The shard_map out_specs below are a fixed metrics template; the
+        # obs tree's keys are model-dependent. Collect health metrics with
+        # the single-pod step (the observability configuration) instead.
+        raise NotImplementedError(
+            "policy.obs_metrics is not supported by make_hier_train_step; "
+            "use make_train_step for instrumented runs (DESIGN.md §11)")
 
     def per_pod(state, batch):
         loss, metrics, grads = _loss_grads(model, state["params"], batch,

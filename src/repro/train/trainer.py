@@ -7,6 +7,14 @@
     checkpoint (injectable failures for tests)
   * straggler watchdog: EWMA step-time anomaly detection with pluggable
     action (log / checkpoint-and-continue)
+  * quant-health observability (repro.obs; DESIGN.md §11): per-step JSONL
+    sink + rolling window for the metrics["obs"] tree, and an activation-
+    collapse sentinel that rides the NaN-skip machinery -- on trip the
+    update is skipped, a checkpoint is written, and (when a fallback step
+    function is provided) training flips to the bf16 arm.
+
+Host transfers are batched: loss / grad_norm / obs are fetched with ONE
+`jax.device_get` per step so device dispatch stays pipelined.
 """
 from __future__ import annotations
 
@@ -17,6 +25,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import (CollapseSentinel, JsonlWriter, RollingWindow,
+                       SentinelConfig)
 
 from . import checkpoint as ckpt_mod
 
@@ -33,6 +44,10 @@ class TrainerConfig:
     straggler_ewma: float = 0.9
     straggler_k: float = 3.0     # flag step if > k x EWMA
     on_straggler: str = "log"    # "log" | "checkpoint"
+    # --- observability (metrics["obs"] from an obs_metrics policy) ---
+    obs_jsonl: str | None = None      # per-step JSONL health log path
+    obs_window: int = 128             # rolling-window length (percentiles)
+    sentinel: SentinelConfig | None = None  # collapse sentinel (off = None)
 
 
 class StragglerWatchdog:
@@ -56,19 +71,32 @@ class StragglerWatchdog:
 class Trainer:
     def __init__(self, step_fn: Callable, state, batch_fn: Callable,
                  cfg: TrainerConfig, place_batch: Callable | None = None,
-                 fail_injector: Callable | None = None):
+                 fail_injector: Callable | None = None,
+                 fallback_step_fn: Callable | None = None):
         """step_fn(state, batch) -> (state, metrics); batch_fn(step) -> batch
-        (host numpy); place_batch optionally device_puts with shardings."""
+        (host numpy); place_batch optionally device_puts with shardings.
+        fallback_step_fn: bf16-policy step the collapse sentinel swaps to
+        (built by the caller from model with policy.fallback())."""
         self.step_fn = step_fn
         self.state = state
         self.batch_fn = batch_fn
         self.cfg = cfg
         self.place_batch = place_batch or (lambda b: b)
         self.fail_injector = fail_injector
+        self.fallback_step_fn = fallback_step_fn
         self.watchdog = StragglerWatchdog(cfg)
         self.history: list[dict] = []
         self.nan_skips = 0
         self.start_step = int(jax.device_get(state["step"]))
+        # observability sinks + sentinel
+        self.obs_writer = JsonlWriter(cfg.obs_jsonl) if cfg.obs_jsonl else None
+        self.obs_window = RollingWindow(cfg.obs_window)
+        self.sentinel = CollapseSentinel(cfg.sentinel) if cfg.sentinel else None
+        self.fallback_active = False
+
+    def obs_summary(self) -> dict:
+        """Percentile summary of the rolling quant-health window."""
+        return self.obs_window.summary()
 
     def _try_resume(self):
         if not self.cfg.ckpt_dir:
@@ -84,6 +112,45 @@ class Trainer:
             ckpt_mod.save(self.cfg.ckpt_dir, step, self.state)
             ckpt_mod.keep_last(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
 
+    def _fetch_host(self, step: int, metrics: dict):
+        """ONE device_get per step (two transfers would serialize dispatch):
+        loss always; grad_norm only when this step is logged; the obs tree
+        only when a sink or the sentinel consumes it."""
+        fetch: dict[str, Any] = {"loss": metrics["loss"]}
+        log_this = (step % self.cfg.log_every == 0)
+        if log_this and "grad_norm" in metrics:
+            fetch["grad_norm"] = metrics["grad_norm"]
+        obs_tree = metrics.get("obs")
+        if obs_tree is not None and (
+                self.obs_writer or self.sentinel is not None):
+            fetch["obs"] = obs_tree
+        host = jax.device_get(fetch)
+        loss = float(host["loss"])
+        gnorm = float(host["grad_norm"]) if "grad_norm" in host else None
+        obs_host = None
+        if "obs" in host:
+            obs_host = {k: float(v) for k, v in host["obs"].items()}
+        return loss, gnorm, obs_host
+
+    def _handle_collapse(self, step: int, decision) -> None:
+        """Sentinel tripped: ride the NaN-skip machinery -- skip the
+        update, checkpoint the last good state, flip to the bf16 fallback
+        step function when one was provided."""
+        self.nan_skips += 1
+        self.history.append({"step": step, "event": "collapse_trip",
+                             "reasons": decision.reasons})
+        if self.obs_writer:
+            self.obs_writer.write({"step": step, "event": "collapse_trip",
+                                   "reasons": decision.reasons})
+        self._save(step)
+        if self.fallback_step_fn is not None and not self.fallback_active:
+            self.step_fn = self.fallback_step_fn
+            self.fallback_active = True
+            self.history.append({"step": step, "event": "bf16_fallback"})
+        if self.nan_skips > self.cfg.max_nan_skips:
+            raise FloatingPointError(
+                f"{self.nan_skips} skipped updates (nan/collapse); aborting")
+
     def run(self, resume: bool = True) -> list[dict]:
         if resume:
             self._try_resume()
@@ -96,7 +163,7 @@ class Trainer:
                 if self.fail_injector:
                     self.fail_injector(step)
                 new_state, metrics = self.step_fn(self.state, batch)
-                loss = float(jax.device_get(metrics["loss"]))
+                loss, gnorm, obs_host = self._fetch_host(step, metrics)
             except ckpt_mod.json.JSONDecodeError:  # pragma: no cover
                 raise
             except Exception as e:  # noqa: BLE001 -- node-failure recovery
@@ -109,6 +176,11 @@ class Trainer:
                                      "error": repr(e)})
                 continue
             dt = time.time() - t0
+            if obs_host is not None:
+                self.obs_window.push({"step": step, "loss": loss, **obs_host})
+                if self.obs_writer:
+                    self.obs_writer.write(
+                        {"step": step, "loss": loss, **obs_host})
             if not np.isfinite(loss):
                 # FP4 divergence guard: skip this update
                 self.nan_skips += 1
@@ -118,16 +190,25 @@ class Trainer:
                         f"{self.nan_skips} non-finite losses; aborting")
                 step += 1
                 continue
+            if self.sentinel is not None and obs_host is not None:
+                decision = self.sentinel.observe(step, obs_host)
+                if decision.tripped:
+                    self._handle_collapse(step, decision)
+                    step += 1
+                    continue
             self.state = new_state
             slow = self.watchdog.observe(step, dt)
             if slow and self.cfg.on_straggler == "checkpoint":
                 self._save(step)
-            rec = {"step": step, "loss": loss, "dt": dt,
-                   "grad_norm": float(jax.device_get(metrics["grad_norm"]))}
+            rec = {"step": step, "loss": loss, "dt": dt}
+            if gnorm is not None:
+                rec["grad_norm"] = gnorm
             self.history.append(rec)
             if step % self.cfg.ckpt_every == 0 and step > self.start_step:
                 self._save(step)
             step += 1
         if self.cfg.ckpt_dir:
             self._save(step)
+        if self.obs_writer:
+            self.obs_writer.close()
         return self.history

@@ -1,0 +1,167 @@
+"""Golden-value + parity tests for the Pallas FP4 kernels (interpret mode)
+against `kernels/ref.py`, on fixed seeds, with stored per-dtype tolerances.
+
+The golden rows are hand-derived from the format grids: each input row's
+absmax equals the format max so the quantization scale is exactly 1 and
+the expected on-grid outputs can be read off the boundary table.
+Tie-breaking on a boundary follows searchsorted(side="right"): the value
+rounds UP (toward +inf) -- +0.25 -> 0.5 but -0.25 -> 0.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, quantize
+from repro.kernels import ref
+from repro.kernels.fp4_matmul import fp4_matmul_kernel
+from repro.kernels.fp4_quant import fp4_quant, quant_stats
+
+# Stored tolerances: (format, dtype) -> abs tolerance on the on-grid
+# output. Kernel and reference share the exact same f32 scaling + boundary
+# decisions, so parity is bit-exact for both input dtypes.
+TOLERANCES = {
+    ("e2m1", "float32"): 0.0,
+    ("e2m1", "bfloat16"): 0.0,
+    ("e1m2", "float32"): 0.0,
+    ("e1m2", "bfloat16"): 0.0,
+}
+
+# --------------------------------------------------------------- golden rows
+# E2M1 grid: 0 .5 1 1.5 2 3 4 6; boundaries .25 .75 1.25 1.75 2.5 3.5 5
+GOLDEN_E2M1 = [
+    ([0.1, 0.24, 0.26, 1.1, 2.4, 2.6, 5.1, -6.0],
+     [0.0, 0.0, 0.5, 1.0, 2.0, 3.0, 6.0, -6.0]),
+    # boundary ties round toward +inf on both signs
+    ([0.25, -0.25, 2.5, 3.5, 5.0, -5.0, -2.5, 6.0],
+     [0.5, 0.0, 3.0, 4.0, 6.0, -4.0, -2.0, 6.0]),
+    # absmax 3 -> scale 2; on-grid output is x*2 for exact grid points
+    ([0.5, 1.0, 1.5, 3.0, -3.0, 0.0, 2.0, 0.75],
+     [1.0, 2.0, 3.0, 6.0, -6.0, 0.0, 4.0, 1.5]),
+]
+
+# E1M2 grid: 0 .5 1 1.5 2 2.5 3 3.5; boundaries .25 .75 ... 3.25
+GOLDEN_E1M2 = [
+    ([0.2, 0.3, 1.2, 2.24, 2.26, 3.3, -3.5, 3.5],
+     [0.0, 0.5, 1.0, 2.0, 2.5, 3.5, -3.5, 3.5]),
+    ([0.25, -0.25, 3.25, -3.25, 0.75, 1.75, -1.75, 3.5],
+     [0.5, 0.0, 3.5, -3.0, 1.0, 2.0, -1.5, 3.5]),
+]
+
+
+@pytest.mark.parametrize("row,expected", GOLDEN_E2M1)
+def test_golden_e2m1_ref(row, expected):
+    q, scale = ref.fp4_quant_ref(jnp.asarray([row], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(q)[0], np.asarray(expected))
+
+
+@pytest.mark.parametrize("row,expected", GOLDEN_E2M1)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_golden_e2m1_pallas_kernel(row, expected, dtype):
+    x = jnp.asarray([row], jnp.dtype(dtype))
+    q, scale = fp4_quant(x, interpret=True)
+    tol = TOLERANCES[("e2m1", dtype)]
+    np.testing.assert_allclose(np.asarray(q, np.float32)[0],
+                               np.asarray(expected), atol=tol)
+
+
+@pytest.mark.parametrize("row,expected", GOLDEN_E1M2)
+def test_golden_e1m2_ref(row, expected):
+    q, scale = quantize.quantize(jnp.asarray([row], jnp.float32),
+                                 axis=-1, fmt=formats.E1M2)
+    tol = TOLERANCES[("e1m2", "float32")]
+    np.testing.assert_allclose(np.asarray(q)[0], np.asarray(expected),
+                               atol=tol)
+
+
+def test_golden_scales():
+    # absmax == fmt max -> scale exactly 1; absmax 3 -> scale 2 (e2m1)
+    x = jnp.asarray([[1.0, -6.0, 2.0, 0.3], [0.5, 1.0, 1.5, 3.0]],
+                    jnp.float32)
+    _, s_ref = ref.fp4_quant_ref(x)
+    _, s_ker = fp4_quant(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_ref), [[1.0], [2.0]])
+    np.testing.assert_array_equal(np.asarray(s_ker), [[1.0], [2.0]])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_quant_kernel_parity_random(seed, dtype):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_t(3.0, size=(48, 96)), jnp.dtype(dtype))
+    q_k, s_k = fp4_quant(x, interpret=True)
+    q_r, s_r = ref.fp4_quant_ref(x)
+    tol = TOLERANCES[("e2m1", dtype)]
+    np.testing.assert_allclose(np.asarray(q_k, np.float32),
+                               np.asarray(q_r, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=0)
+
+
+def test_quant_kernel_degenerate_rows():
+    # all-zero row -> scale 1, q 0; constant row maps to the format max
+    x = jnp.zeros((4, 16), jnp.float32).at[1].set(0.375)
+    q, s = fp4_quant(x, interpret=True)
+    q_r, s_r = ref.fp4_quant_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(q)[0], 0.0)
+    np.testing.assert_array_equal(np.asarray(q)[1], 6.0)
+
+
+# ------------------------------------------------------------------- matmul
+
+def test_matmul_golden_single_tile():
+    """K fits one tile: kernel accumulation order == ref, exact equality.
+    Hand value: a=[2,3], w=[[1],[6]] on grid, sa=2, sw=0.5 ->
+    (2*1 + 3*6)/(2*0.5) = 20."""
+    a_q = jnp.asarray([[2.0, 3.0]], jnp.float32)
+    w_q = jnp.asarray([[1.0], [6.0]], jnp.float32)
+    sa = jnp.asarray([[2.0]], jnp.float32)
+    sw = jnp.asarray([[0.5]], jnp.float32)
+    out = fp4_matmul_kernel(a_q, w_q, sa, sw, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), [[20.0]])
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_matmul_parity_random(seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    a_q, sa = quantize.quantize(a, axis=-1)
+    w_q, sw = quantize.quantize(w, axis=0)
+    out_k = fp4_matmul_kernel(a_q, w_q, sa, sw, interpret=True)
+    out_r = ref.fp4_matmul_ref(a_q, w_q, sa, sw)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_parity_multi_k_tile(seed=3):
+    """K > block_k: per-tile f32 accumulation vs one jnp.matmul -- order
+    differs, bound the drift instead of demanding bit equality."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((16, 96)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((96, 8)), jnp.float32)
+    a_q, sa = quantize.quantize(a, axis=-1)
+    w_q, sw = quantize.quantize(w, axis=0)
+    out_k = fp4_matmul_kernel(a_q, w_q, sa, sw, block_k=32, interpret=True)
+    out_r = ref.fp4_matmul_ref(a_q, w_q, sa, sw)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- quant_stats
+
+def test_quant_stats_health_fields():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    q, s = fp4_quant(x, interpret=True)
+    stats = {k: float(v) for k, v in quant_stats(x, q, s).items()}
+    assert set(stats) == {"mse", "snr_db", "scale_min", "scale_max",
+                          "underflow_frac"}
+    assert stats["snr_db"] > 6.0          # healthy gaussian tensor
+    assert stats["underflow_frac"] == 0.0
+    assert stats["scale_min"] <= stats["scale_max"]
+    # degenerate input: every row underflows
+    tiny = jnp.full((8, 16), 1e-33, jnp.float32)
+    q2, s2 = fp4_quant(tiny, interpret=True)
+    assert float(quant_stats(tiny, q2, s2)["underflow_frac"]) == 1.0

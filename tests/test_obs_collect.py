@@ -1,0 +1,211 @@
+"""repro.obs collection: collector semantics, jit/grad survival on the
+instrumented smoke model, trace-safety suspensions, sinks."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.core.policy import get_policy
+from repro.models import build_model
+from repro.obs.sinks import JsonlWriter, RollingWindow, read_jsonl
+
+CFG = get_config("llama2-400m", smoke=True)   # unrolled, remat off: the
+SEQ, BATCH = 32, 2                            # observability configuration
+OBS_POLICY = get_policy("fp4_obs")
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(
+        rng.integers(0, CFG.vocab_size, (BATCH, SEQ)), jnp.int32)}
+
+
+# ------------------------------------------------------------ collector unit
+
+def test_collector_scopes_and_aggregate():
+    with obs.collect() as col:
+        with obs.scope("L0"):
+            with obs.site("wq") as rec:
+                assert rec is True
+                obs.record("clamp_frac", 0.1)
+        with obs.scope("L1"):
+            with obs.site("wq"):
+                obs.record("clamp_frac", 0.3)
+                obs.record("snr_db", 12.0)
+        out = col.harvest()
+    assert float(out["L0/wq/clamp_frac"]) == pytest.approx(0.1)
+    assert float(out["L1/wq/clamp_frac"]) == pytest.approx(0.3)
+    assert float(out["agg/max_clamp_frac"]) == pytest.approx(0.3)
+    assert float(out["agg/min_snr_db"]) == pytest.approx(12.0)
+    assert float(out["agg/n_sites"]) == 2.0
+
+
+def test_no_collector_is_noop():
+    assert obs.active() is None
+    obs.record("clamp_frac", 1.0)          # must not raise
+    obs.record_clamp(jnp.ones(4), jnp.zeros(4))
+    with obs.site("x") as rec:
+        assert rec is False
+
+
+def test_collect_disabled_yields_none():
+    with obs.collect(enabled=False) as col:
+        assert col is None
+        assert obs.active() is None
+
+
+def test_suspended_drops_records():
+    with obs.collect() as col:
+        obs.record("clamp_frac", 0.5)
+        with obs.suspended():
+            obs.record("clamp_frac", 0.9)  # dropped
+            assert obs.active() is None
+        out = col.harvest()
+    assert float(out["clamp_frac"]) == pytest.approx(0.5)
+    assert float(out["agg/max_clamp_frac"]) == pytest.approx(0.5)
+
+
+def test_suppress_wraps_fn():
+    def body():
+        obs.record("mse", 123.0)
+    with obs.collect() as col:
+        obs.suppress(body)()
+        assert "mse" not in col.harvest()
+
+
+def test_auto_site_numbering():
+    with obs.collect() as col:
+        with obs.site():
+            obs.record("mse", 1.0)
+        with obs.site():
+            obs.record("mse", 2.0)
+        out = col.harvest()
+    assert "site0/mse" in out and "site1/mse" in out
+
+
+# ----------------------------------------------------- jit/grad end-to-end
+
+def test_obs_survives_jit_and_grad():
+    model = build_model(CFG, OBS_POLICY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda q: model.loss(q, b), has_aux=True)(p)
+        return loss, metrics, grads
+
+    loss, metrics, grads = step(params, _batch())
+    assert "obs" in metrics
+    host = {k: float(v) for k, v in jax.device_get(metrics["obs"]).items()}
+    # every unrolled layer exposes every GeMM site with the full vocabulary
+    for layer in range(CFG.n_layers):
+        for gemm in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
+            assert f"L{layer}/{gemm}/clamp_frac" in host
+            assert f"L{layer}/{gemm}/act/snr_db" in host
+            assert f"L{layer}/{gemm}/act/underflow_frac" in host
+            assert f"L{layer}/{gemm}/weight/dge_mismatch" in host
+    for agg in ("agg/min_snr_db", "agg/max_clamp_frac",
+                "agg/max_underflow_frac", "agg/max_residual_mass",
+                "agg/n_sites"):
+        assert agg in host
+    assert np.isfinite(host["agg/min_snr_db"])
+    assert 0.0 <= host["agg/max_clamp_frac"] <= 1.0
+    # health scalars are stop_gradiented: grads stay finite
+    assert np.isfinite(float(loss))
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32)))
+               for g in jax.tree.leaves(grads))
+
+
+def test_obs_off_metrics_unchanged():
+    model = build_model(CFG, get_policy("fp4"))
+    params, _ = model.init(jax.random.PRNGKey(0))
+    _, metrics = jax.jit(lambda p, b: model.loss(p, b))(params, _batch())
+    assert "obs" not in metrics
+
+
+def test_obs_values_match_between_policies():
+    """The obs hooks must not perturb the computation: loss identical with
+    obs on and off (same params, same batch)."""
+    b = _batch(3)
+    m_off = build_model(CFG, get_policy("fp4"))
+    params, _ = m_off.init(jax.random.PRNGKey(1))
+    loss_off, _ = jax.jit(lambda p: m_off.loss(p, b))(params)
+    m_on = build_model(CFG, OBS_POLICY)
+    loss_on, metrics = jax.jit(lambda p: m_on.loss(p, b))(params)
+    np.testing.assert_allclose(float(loss_off), float(loss_on), rtol=1e-6)
+    assert "obs" in metrics
+
+
+@pytest.mark.parametrize("scan_layers,remat", [(True, False), (False, True),
+                                               (True, True)])
+def test_inner_trace_configs_safe(scan_layers, remat):
+    """scan/remat introduce inner traces; collection suspends there rather
+    than leaking tracers. Loss must still compute under jit."""
+    cfg = CFG.replace(scan_layers=scan_layers, remat=remat)
+    model = build_model(cfg, OBS_POLICY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b))(params, _batch())
+    assert np.isfinite(float(loss))
+    if "obs" in metrics:
+        # whatever was recorded outside the inner traces must be finite
+        for v in jax.device_get(metrics["obs"]).values():
+            assert np.isfinite(float(v))
+
+
+# ------------------------------------------------------------------- decode
+
+def test_serve_decode_emits_health(tmp_path):
+    from repro.serve.engine import greedy_generate
+    model = build_model(CFG, OBS_POLICY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    log = tmp_path / "decode_health.jsonl"
+    with JsonlWriter(str(log)) as w:
+        out = greedy_generate(model, params, _batch(), steps=4,
+                              max_len=SEQ + 8, obs_writer=w)
+    assert out.shape == (BATCH, 4)
+    recs = read_jsonl(str(log))
+    assert len(recs) == 3                      # steps - 1 decode steps
+    assert {r["decode_step"] for r in recs} == {0, 1, 2}
+    assert "agg/min_snr_db" in recs[0]
+    assert any(k.endswith("/clamp_frac") for k in recs[0])
+
+
+# -------------------------------------------------------------------- sinks
+
+def test_jsonl_writer_roundtrip(tmp_path):
+    path = tmp_path / "m.jsonl"
+    w = JsonlWriter(str(path))
+    w.write({"step": 0, "loss": 1.5})
+    w.write({"step": 1, "loss": 1.25, "agg/min_snr_db": 17.0})
+    w.close()
+    recs = read_jsonl(str(path))
+    assert [r["step"] for r in recs] == [0, 1]
+    assert recs[1]["agg/min_snr_db"] == 17.0
+    # append mode: a reopened writer extends the same file
+    with JsonlWriter(str(path)) as w2:
+        w2.write({"step": 2, "loss": 1.0})
+    assert len(read_jsonl(str(path))) == 3
+    # each line is standalone JSON
+    lines = path.read_text().strip().split("\n")
+    assert all(isinstance(json.loads(l), dict) for l in lines)
+
+
+def test_rolling_window_summary():
+    win = RollingWindow(size=4)
+    for i in range(10):
+        win.push({"snr": float(i), "note": "text-ignored"})
+    assert len(win) == 4                       # only the last 4 kept
+    s = win.summary()
+    assert s["snr"]["min"] == 6.0 and s["snr"]["max"] == 9.0
+    assert s["snr"]["last"] == 9.0
+    assert 6.0 <= s["snr"]["p50"] <= 9.0
+    assert "note" not in s                     # non-numeric dropped
+
+
+def test_rolling_window_empty():
+    assert RollingWindow(8).summary() == {}

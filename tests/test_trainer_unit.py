@@ -1,0 +1,159 @@
+"""Trainer unit tests: StragglerWatchdog EWMA semantics, the
+on_straggler="checkpoint" action, _try_resume round-trip, and the
+batched-host-transfer contract (ONE jax.device_get per step; grad_norm
+fetched only on logged steps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt_mod
+from repro.train import trainer as trainer_mod
+from repro.train.trainer import (StragglerWatchdog, Trainer, TrainerConfig)
+
+
+def _fake_step(state, batch):
+    new = dict(state, step=state["step"] + 1)
+    return new, {"loss": jnp.float32(1.0), "grad_norm": jnp.float32(0.5)}
+
+
+def _state():
+    return {"params": {"w": jnp.arange(4, dtype=jnp.float32)},
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _trainer(cfg, **kw):
+    return Trainer(_fake_step, _state(), batch_fn=lambda s: {}, cfg=cfg, **kw)
+
+
+class _FakeClock:
+    """Scripted time.time() for deterministic step durations."""
+
+    def __init__(self, dts):
+        self._t = 0.0
+        self._dts = list(dts)
+        self._at_start = True
+
+    def time(self):
+        if self._at_start:
+            self._at_start = False
+            return self._t
+        self._t += self._dts.pop(0)
+        self._at_start = True
+        return self._t
+
+
+# ----------------------------------------------------------------- watchdog
+
+def test_watchdog_ewma_warmup():
+    w = StragglerWatchdog(TrainerConfig(total_steps=1, straggler_k=3.0))
+    assert w.ewma is None
+    assert w.observe(0, 5.0) is False     # first observation only seeds
+    assert w.ewma == 5.0
+    assert not w.flagged
+
+
+def test_watchdog_flags_above_threshold():
+    w = StragglerWatchdog(TrainerConfig(total_steps=1, straggler_k=3.0,
+                                        straggler_ewma=0.9))
+    w.observe(0, 1.0)
+    assert w.observe(1, 2.9) is False     # below 3x
+    assert w.observe(2, 10.0) is True     # way above 3x EWMA
+    assert w.flagged and w.flagged[0][0] == 2
+
+
+def test_watchdog_ewma_update_formula():
+    w = StragglerWatchdog(TrainerConfig(total_steps=1, straggler_ewma=0.9))
+    w.observe(0, 1.0)
+    w.observe(1, 2.0)
+    assert w.ewma == pytest.approx(0.9 * 1.0 + 0.1 * 2.0)
+
+
+def test_watchdog_slow_step_still_updates_ewma():
+    w = StragglerWatchdog(TrainerConfig(total_steps=1, straggler_k=3.0,
+                                        straggler_ewma=0.9))
+    w.observe(0, 1.0)
+    assert w.observe(1, 10.0) is True
+    assert w.ewma == pytest.approx(0.9 * 1.0 + 0.1 * 10.0)
+
+
+def test_on_straggler_checkpoint_action(tmp_path, monkeypatch):
+    cfg = TrainerConfig(total_steps=5, ckpt_dir=str(tmp_path),
+                        ckpt_every=1000, straggler_k=3.0,
+                        on_straggler="checkpoint")
+    t = _trainer(cfg)
+    # steps 0-2 take 1s, step 3 takes 30s (straggler), step 4 normal
+    monkeypatch.setattr(trainer_mod, "time", _FakeClock([1, 1, 1, 30, 1]))
+    t.run(resume=False)
+    assert t.watchdog.flagged and t.watchdog.flagged[0][0] == 3
+    # the straggler action cut a checkpoint at the flagged step (the final
+    # end-of-run save at step 5 also exists; ckpt_every itself never hit)
+    assert (tmp_path / "step_00000003").is_dir()
+
+
+def test_on_straggler_log_does_not_checkpoint(tmp_path, monkeypatch):
+    cfg = TrainerConfig(total_steps=5, ckpt_dir=None, ckpt_every=1000,
+                        straggler_k=3.0, on_straggler="log")
+    t = _trainer(cfg)
+    monkeypatch.setattr(trainer_mod, "time", _FakeClock([1, 1, 1, 30, 1]))
+    t.run(resume=False)
+    assert t.watchdog.flagged
+    assert ckpt_mod.latest_step(str(tmp_path)) is None
+
+
+# ------------------------------------------------------------------- resume
+
+def test_try_resume_roundtrip(tmp_path):
+    t1 = _trainer(TrainerConfig(total_steps=10, ckpt_dir=str(tmp_path)))
+    t1.state = {"params": {"w": jnp.asarray([9.0, 8.0, 7.0, 6.0])},
+                "step": jnp.asarray(7, jnp.int32)}
+    t1._save(7)
+    t2 = _trainer(TrainerConfig(total_steps=10, ckpt_dir=str(tmp_path)))
+    assert t2.start_step == 0
+    t2._try_resume()
+    assert t2.start_step == 7
+    np.testing.assert_array_equal(np.asarray(t2.state["params"]["w"]),
+                                  [9.0, 8.0, 7.0, 6.0])
+
+
+def test_try_resume_noop_without_ckpt(tmp_path):
+    t = _trainer(TrainerConfig(total_steps=10, ckpt_dir=str(tmp_path)))
+    t._try_resume()                        # empty dir: no-op
+    assert t.start_step == 0
+    t2 = _trainer(TrainerConfig(total_steps=10, ckpt_dir=None))
+    t2._try_resume()
+    assert t2.start_step == 0
+
+
+# --------------------------------------------------- batched host transfers
+
+def test_single_device_get_per_step(monkeypatch):
+    t = _trainer(TrainerConfig(total_steps=6, log_every=2))
+    calls = {"n": 0}
+    orig = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return orig(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    t.run(resume=False)
+    assert calls["n"] == 6                 # exactly one fetch per step
+
+
+def test_grad_norm_only_on_logged_steps():
+    t = _trainer(TrainerConfig(total_steps=7, log_every=3))
+    hist = t.run(resume=False)
+    recs = {h["step"]: h for h in hist if "loss" in h}
+    assert set(recs) == set(range(7))
+    for step, rec in recs.items():
+        if step % 3 == 0:
+            assert rec["grad_norm"] == pytest.approx(0.5)
+        else:
+            assert "grad_norm" not in rec
+
+
+def test_loss_always_fetched():
+    t = _trainer(TrainerConfig(total_steps=4, log_every=100))
+    hist = t.run(resume=False)
+    assert all(h["loss"] == 1.0 for h in hist if "loss" in h)
