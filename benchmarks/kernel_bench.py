@@ -23,6 +23,10 @@ HBM = 819e9
 PEAK_BF16 = 197e12
 PEAK_INT8 = 394e12
 
+# Fused-vs-split comparison shapes: one MXU-aligned, one skinny-M, one
+# deliberately ragged (nothing divides the default blocks).
+FUSED_SHAPES = [(256, 512, 256), (128, 384, 512), (320, 192, 160)]
+
 
 def _time(fn, *args, iters=5):
     fn(*args)  # compile
@@ -79,3 +83,94 @@ def run(csv_rows: list):
           f"({naive_bytes/flash_bytes:.0f}x reduction)")
     csv_rows.append(("kernel/flash_traffic_reduction", 0.0,
                      f"{naive_bytes/flash_bytes:.1f}x"))
+
+    fused_vs_split(csv_rows)
+
+
+def _traffic_model(M: int, K: int, N: int):
+    """Per-pipeline HBM bytes over the activation path (DESIGN.md §12).
+
+    Split (clamp kernel -> quant kernel -> GeMM): A crosses HBM three
+    times plus the intermediate writes -- clamp r2+w2, quant r2+w0.5,
+    GeMM r0.5 = 7 B/elt. Fused: scale pre-pass r2 (writes only M floats),
+    fused GeMM r2 (raw bf16 A, quantized in VMEM) = 4 B/elt. Weights
+    (0.5 B/elt codes) + scales + f32 output are identical on both sides.
+    """
+    common = 0.5 * K * N + 4.0 * (M + N) + 4.0 * M * N
+    split = 7.0 * M * K + 0.5 * M * K + common  # + A_q GeMM-side read
+    fused = 4.0 * M * K + 4.0 * M + common      # + sa re-read by the GeMM
+    return split, fused
+
+
+def fused_vs_split(csv_rows: list):
+    """Fused single-pass pipeline vs the split clamp->quant->GeMM kernels:
+    CPU interpret walltime (simulation cost) and the v5e HBM projection."""
+    from repro.kernels import autotune, ops
+
+    print("\n# fused vs split FP4 pipeline "
+          "(CPU interpret walltime | v5e HBM-traffic projection)")
+    key = jax.random.PRNGKey(0)
+    for M, K, N in FUSED_SHAPES:
+        k1, k2 = jax.random.split(jax.random.fold_in(key, M + N))
+        a = jax.random.normal(k1, (M, K), jnp.float32)
+        w = jax.random.normal(k2, (K, N), jnp.float32)
+        sw = quantize.absmax_scale(w, 0, 6.0)
+        w_q = quantize.lut_round(w * sw)
+
+        def split_pipe(a):
+            a_c, _ = ops.outlier_clamp(a, -3.0, 3.0)
+            a_q, sa = ops.fp4_quantize(a_c)
+            return ops.fp4_matmul_pallas(a_q, w_q, sa, sw)
+
+        def fused_pipe(a):
+            lohi = jnp.asarray([[-3.0, 3.0]], jnp.float32)
+            sa = ops.fused_row_scale(a, lohi)
+            return ops.fp4_matmul_fused(a, w_q, sa, sw, lohi)
+
+        t_split = _time(split_pipe, a, iters=2)
+        t_fused = _time(fused_pipe, a, iters=2)
+        b_split, b_fused = _traffic_model(M, K, N)
+        p_split = b_split / HBM * 1e6
+        p_fused = b_fused / HBM * 1e6
+        tag = f"{M}x{K}x{N}"
+        print(f"  {tag:>13}: cpu split {t_split:.0f}us fused {t_fused:.0f}us"
+              f" | v5e traffic {b_split/1e6:.2f} -> {b_fused/1e6:.2f} MB"
+              f" ({b_split/b_fused:.2f}x less, {p_split:.1f} -> "
+              f"{p_fused:.1f}us)")
+        csv_rows.append((f"kernel/fused_cpu_{tag}", t_fused,
+                         f"split_{t_split:.0f}us"))
+        csv_rows.append((f"kernel/fused_v5e_traffic_{tag}", p_fused,
+                         f"{b_split/b_fused:.2f}x_less_than_split"))
+
+    # Persist tuned blocks for the comparison shapes (exercises the
+    # autotuner end-to-end; CI uploads the resulting JSON artifact).
+    M, K, N = FUSED_SHAPES[-1]
+    a = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32)
+    w_q = quantize.lut_round(jnp.clip(
+        jax.random.normal(jax.random.PRNGKey(3), (K, N)), -6, 6))
+    sw = jnp.ones((1, N), jnp.float32)
+    sa = ops.fused_row_scale(a, jnp.asarray([[-3.0, 3.0]], jnp.float32))
+    lohi = jnp.asarray([[-3.0, 3.0]], jnp.float32)
+
+    def make_fn(bm, bn, bk):
+        def fn():
+            out = ops.fp4_matmul_fused(a, w_q, sa, sw, lohi,
+                                       blocks=(bm, bn, bk))
+            jax.block_until_ready(out)
+        return fn
+
+    best, best_t = autotune.autotune(
+        "fused_fwd", make_fn, M, N, K, iters=1,
+        candidates=[(64, 64, 64), (128, 128, 128), (128, 128, 256)])
+    print(f"  autotune fused_fwd {M}x{N}x{K}: best blocks {best} "
+          f"({best_t*1e6:.0f}us) -> {autotune.default_cache_path()}")
+    csv_rows.append((f"kernel/autotune_fused_fwd_{M}x{N}x{K}",
+                     best_t * 1e6, f"blocks_{best[0]}x{best[1]}x{best[2]}"))
+
+
+if __name__ == "__main__":
+    rows: list = []
+    fused_vs_split(rows)
+    print("\ncsv:")
+    for name, val, note in rows:
+        print(f"{name},{val:.3f},{note}")

@@ -5,6 +5,11 @@ checkpointing with resume, NaN guards, straggler watchdog.
     PYTHONPATH=src python examples/train_llama_fp4.py \
         [--steps 300] [--policy fp4] [--ckpt /tmp/fp4_ckpt] [--d-model 512]
 
+`--policy fp4_fused` runs every GeMM through the single-pass Pallas
+clamp+quantize+GEMM pipeline (`pallas_fused` backend, DESIGN.md §12) --
+interpret-mode simulation on CPU, so expect it slower here; on TPU it is
+the one-HBM-pass path. `fp4_fused_obs` adds the quant-health telemetry.
+
 ~100M params: d=512, L=8, ff=2048, vocab=32000 (tied). On CPU this runs a
 few hundred steps in minutes at seq 256 / batch 8 -- the shape of the real
 pretraining loop, scaled down.

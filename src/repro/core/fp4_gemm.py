@@ -22,9 +22,21 @@ GeMM backends:
     int8 codes equals 4x the FP4 product exactly; accumulate in int32 and
     fold /4 into the output rescale. On TPU v5e this hits the 394 TOPS int8
     MXU path (2x bf16), realizing the paper's FP4:FP8 = 2x throughput claim.
-  * "pallas": the fused Pallas kernel (kernels/fp4_matmul.py).
+  * "pallas": the Pallas dequantizing-GeMM kernel (kernels/fp4_matmul.py);
+    quantization still happens outside (the split path: quantize kernel ->
+    HBM -> GeMM kernel).
+  * "pallas_fused": the single-pass pipeline (kernels/fp4_fused.py) behind
+    `jax.custom_vjp`: clamp + token-wise scaling + E2M1 quantization run
+    inside the GEMM's K-loop (no A_q in HBM), the backward runs the fused
+    dgrad (g @ W_dq^T) and DGE-masked wgrad (Eq. 22) Pallas kernels, and
+    the wgrad RE-quantizes the activation in-kernel instead of saving A_q
+    as a residual. Falls back to the composed path for the `w_quant="none"`
+    / `a_quant="none"` arms and non-vector-wise granularities (DESIGN.md
+    §12).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -113,21 +125,146 @@ def _int8_gemm_bwd(res, g):
 _int8_gemm_ste.defvjp(_int8_gemm_fwd, _int8_gemm_bwd)
 
 
-def fp4_matmul(a: jnp.ndarray, w: jnp.ndarray, policy: QuantPolicy) -> jnp.ndarray:
+# ---------------------------------------------------------------------------
+# Fused single-pass backend (kernels/fp4_fused.py) behind a custom VJP.
+#
+# Derivation (matches the autodiff-composed path exactly, App. C.2):
+#   y[m,n]  = (Q(a*sa) @ Q(w*sw))[m,n] / (sa[m]*sw[n])
+#   dA      = g @ (W_q/sw)^T          -- sa cancels through the STE
+#   dW      = ((A_q/sa)^T @ g) * f'(w*sw)  -- sw cancels through the DGE
+# The clamp bounds (lo, hi) participate in the forward only; their
+# cotangents are zero (OCC thresholds are stop_gradient'ed upstream) and
+# dA is masked by the clamp indicator 1{lo <= a <= hi}.
+# ---------------------------------------------------------------------------
+
+
+def fused_backend_eligible(policy: QuantPolicy) -> bool:
+    """True when `gemm_backend="pallas_fused"` actually takes the fused
+    kernel path; the high-precision arms and non-vector-wise granularities
+    fall back to the composed simulation (DESIGN.md §12)."""
+    return (policy.gemm_backend == "pallas_fused"
+            and policy.a_quant == "ste"
+            and policy.w_quant in ("dge", "ste")
+            and policy.a_axis == -1
+            and policy.w_axis == 0)
+
+
+def _fused_fwd_impl(a2d, w, lohi, policy: QuantPolicy):
+    from repro.kernels import ops as kernel_ops  # lazy: optional dep
+    fmt = formats.get_format(policy.fmt)
+    sw = stop_grad(quantize.absmax_scale(w, 0, fmt.max_value))
+    w_q = quantize.lut_round(w.astype(jnp.float32) * sw, policy.fmt)
+    sa = kernel_ops.fused_row_scale(a2d, lohi, fmt=policy.fmt)
+    y = kernel_ops.fp4_matmul_fused(a2d, w_q, sa, sw, lohi, fmt=policy.fmt)
+    return y, sa, w_q, sw
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fused_gemm(a2d, w, lohi, policy: QuantPolicy):
+    y, _, _, _ = _fused_fwd_impl(a2d, w, lohi, policy)
+    return y
+
+
+def _fused_gemm_fwd(a2d, w, lohi, policy):
+    y, sa, w_q, sw = _fused_fwd_impl(a2d, w, lohi, policy)
+    return y, (a2d, w, lohi, sa, w_q, sw)
+
+
+def _fused_gemm_bwd(policy, res, g):
+    from repro.kernels import ops as kernel_ops
+    a2d, w, lohi, sa, w_q, sw = res
+    g32 = g.astype(jnp.float32)
+    da = kernel_ops.fp4_dgrad_fused(g32, w_q, sw)
+    # Clamp indicator (identity for the +/-inf no-clamp bounds). Matches
+    # jnp.clip's VJP except exactly ON a finite bound, where clip's
+    # max/min subgradient halves the cotangent (measure-zero; §12).
+    af = a2d.astype(jnp.float32)
+    da = da * ((af >= lohi[0, 0]) & (af <= lohi[0, 1])).astype(jnp.float32)
+    if policy.w_quant == "dge":
+        mask = dge_mod.dge_derivative(w.astype(jnp.float32) * sw,
+                                      policy.dge_k, policy.dge_clip,
+                                      policy.fmt)
+    else:  # "ste"
+        mask = jnp.ones(w.shape, jnp.float32)
+    dw = kernel_ops.fp4_wgrad_fused(a2d, sa, g32, mask, lohi,
+                                    fmt=policy.fmt)
+    return (da.astype(a2d.dtype), dw.astype(w.dtype),
+            jnp.zeros_like(lohi))
+
+
+_fused_gemm.defvjp(_fused_gemm_fwd, _fused_gemm_bwd)
+
+
+def _fused_path(a, w, policy: QuantPolicy, clamp_bounds) -> jnp.ndarray:
+    """Dispatch a (..., K) activation through the fused backend."""
+    orig_shape = None
+    if a.ndim > 2:
+        orig_shape = a.shape
+        a = a.reshape(-1, a.shape[-1])
+    if clamp_bounds is None:
+        lohi = jnp.asarray([[-jnp.inf, jnp.inf]], jnp.float32)
+    else:
+        lohi = jnp.stack([jnp.asarray(clamp_bounds[0], jnp.float32),
+                          jnp.asarray(clamp_bounds[1], jnp.float32)]
+                         ).reshape(1, 2)
+    y = _fused_gemm(a, w, stop_grad(lohi), policy)
+    if policy.obs_metrics and obs.active() is not None:
+        # Same vocabulary as the composed path, recomputed with jnp from
+        # the raw operands (obs-on runs are simulation/debug mode; the
+        # fused kernel itself stays stats-free).
+        fmt = formats.get_format(policy.fmt)
+        a_c = stop_grad(jnp.clip(a.astype(jnp.float32), lohi[0, 0],
+                                 lohi[0, 1]))
+        sa = quantize.absmax_scale(a_c, -1, fmt.max_value)
+        a_q = quantize.lut_round(a_c * sa, policy.fmt)
+        obs.record_scale("act", a_c, sa, -1)
+        obs.record_quant_error("act", a_c, a_q, sa)
+        sw = stop_grad(quantize.absmax_scale(w, 0, fmt.max_value))
+        w_scaled = stop_grad(w.astype(jnp.float32) * sw)
+        w_q = quantize.lut_round(w_scaled, policy.fmt)
+        obs.record_scale("weight", w, sw, 0)
+        obs.record_quant_error("weight", w, w_q, sw)
+        if policy.w_quant == "dge":
+            obs.record_dge(w_scaled, w_q,
+                           dge_mod.dge_derivative(w_scaled, policy.dge_k,
+                                                  policy.dge_clip,
+                                                  policy.fmt))
+    if orig_shape is not None:
+        y = y.reshape(*orig_shape[:-1], y.shape[-1])
+    return y.astype(policy.compute_dtype)
+
+
+def fp4_matmul(a: jnp.ndarray, w: jnp.ndarray, policy: QuantPolicy, *,
+               clamp_bounds=None) -> jnp.ndarray:
     """y = FP4(a) @ FP4(w) with vector-wise rescale. a: (..., K), w: (K, N).
 
     Output dtype = policy.compute_dtype. Fully differentiable; the DGE/STE
-    estimators live inside the quantizers.
+    estimators live inside the quantizers (composed path) or inside the
+    custom VJP (`pallas_fused` backend).
+
+    `clamp_bounds=(lo, hi)` folds the OCC clamp into the fused kernel when
+    the fused backend is eligible; on any fallback path the clamp is
+    applied with jnp.clip before quantization, so semantics never depend
+    on the backend.
     """
     if not policy.enabled:
         return jnp.matmul(a, w, preferred_element_type=jnp.float32).astype(
             policy.compute_dtype)
 
+    if fused_backend_eligible(policy):
+        return _fused_path(a, w, policy, clamp_bounds)
+    if clamp_bounds is not None:
+        a = jnp.clip(a, jnp.asarray(clamp_bounds[0], a.dtype),
+                     jnp.asarray(clamp_bounds[1], a.dtype))
+
     a_q, sa = _quantize_act(a, policy)
     w_q, sw = _quantize_weight(w, policy)
 
-    if policy.gemm_backend == "bf16_sim" or policy.a_quant == "none" or \
-            policy.w_quant == "none":
+    if policy.gemm_backend in ("bf16_sim", "pallas_fused") or \
+            policy.a_quant == "none" or policy.w_quant == "none":
+        # "pallas_fused" reaching this line means the policy was not
+        # fused-eligible (high-precision arm / tensor-wise granularity):
+        # simulate with the composed bf16 path.
         acc = _gemm_bf16(a_q, w_q)
     elif policy.gemm_backend == "int8":
         acc = _int8_gemm_ste(a_q, w_q)
@@ -137,8 +274,11 @@ def fp4_matmul(a: jnp.ndarray, w: jnp.ndarray, policy: QuantPolicy) -> jnp.ndarr
     else:
         raise ValueError(policy.gemm_backend)
 
-    # Outer-product rescale (Fig. 2): sa broadcasts over rows, sw over cols.
-    inv = 1.0 / sa if policy.a_axis is not None else jnp.asarray(1.0 / sa)
-    acc = acc * inv
-    acc = acc / sw
+    # Outer-product rescale (Fig. 2): sa broadcasts over rows, sw over
+    # cols; with tensor-wise granularity both are scalars. One division
+    # chain for every granularity -- the old code special-cased
+    # `a_axis is None` with a reciprocal-then-multiply, whose extra
+    # rounding made the scalar-scale arm drift from the vector-wise path
+    # (and from kernels/ref.py, which divides).
+    acc = acc / sa / sw
     return acc.astype(policy.compute_dtype)

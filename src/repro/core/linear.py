@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro import obs
 
+from . import fp4_gemm
 from . import occ as occ_mod
 from .fp4_gemm import fp4_matmul
 from .policy import QuantPolicy
@@ -36,6 +37,19 @@ def fp4_linear(a: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
 
     with obs.site(name) if policy.obs_metrics else _NULL_CTX as rec:
         if policy.occ and policy.a_quant != "none":
+            if policy.occ_comp == "none" and not rec and \
+                    fp4_gemm.fused_backend_eligible(policy):
+                # Clamp-only arm on the fused backend: the clamp runs
+                # INSIDE the fused kernel's K-loop (no clamped copy of A
+                # in HBM). The residual is never needed here; with obs on
+                # we keep the composed clamp so record_clamp sees Delta.
+                lo, hi = occ_mod.quantile_thresholds(
+                    jax.lax.stop_gradient(a), policy.occ_alpha,
+                    policy.occ_threshold)
+                y = fp4_matmul(a, w, policy, clamp_bounds=(lo, hi))
+                if b is not None:
+                    y = y + b.astype(y.dtype)
+                return y
             a_c, delta = occ_mod.clamp_and_residual(a, policy.occ_alpha,
                                                     policy.occ_threshold)
             if rec:

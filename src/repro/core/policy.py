@@ -40,7 +40,11 @@ class QuantPolicy:
     occ_channel_frac: float = 0.02  # top-k channel fraction for "channel"
 
     # --- GeMM execution ---
-    gemm_backend: str = "bf16_sim"  # "bf16_sim" | "int8" | "pallas"
+    # "bf16_sim" | "int8" | "pallas" (split quantize->GeMM kernels) |
+    # "pallas_fused" (single-pass clamp+quant+GeMM+rescale kernel with a
+    # custom-VJP fused backward; falls back to bf16_sim for the
+    # high-precision and tensor-wise arms -- DESIGN.md §12)
+    gemm_backend: str = "bf16_sim"
     compute: str = "bfloat16"       # non-GeMM compute dtype
 
     # --- scope ---
@@ -83,6 +87,9 @@ PRESETS: dict[str, QuantPolicy] = {
     "fp4_obs": FP4_PAPER.replace(obs_metrics=True),  # instrumented arm
     "fp4_int8": FP4_PAPER.replace(gemm_backend="int8"),
     "fp4_pallas": FP4_PAPER.replace(gemm_backend="pallas"),
+    "fp4_fused": FP4_PAPER.replace(gemm_backend="pallas_fused"),
+    "fp4_fused_obs": FP4_PAPER.replace(gemm_backend="pallas_fused",
+                                       obs_metrics=True),
     # beyond-paper TPU variants (§Perf hillclimb arms):
     "fp4_channel": FP4_PAPER.replace(occ_comp="channel"),
     "fp4_nocomp": FP4_PAPER.replace(occ_comp="none"),

@@ -1,0 +1,162 @@
+"""Shape -> (bm, bn, bk) block-size autotuner for the Pallas GEMM kernels.
+
+Small on purpose: a JSON-persisted dict from ``op:backend:MxNxK`` to the
+best-measured block triple, plus MXU-aligned heuristic defaults for cache
+misses. The tuner itself (`autotune`) times real kernel invocations -- on
+this CPU container that measures the interpret-mode simulation (ordering
+is still meaningful because interpret cost tracks grid-step count), on TPU
+it measures the compiled Mosaic kernel.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``. The file is written atomically
+(tmp + rename) so concurrent benchmark runs cannot corrupt it. Format:
+
+    {"version": 1,
+     "entries": {"fused_fwd:pallas_fused:256x512x256": [128, 128, 128],
+                 ...}}
+
+Entries are exact-shape keyed: GEMM shapes in one training run come from a
+handful of (d_model, d_ff, vocab) combinations, so the cache stays tiny and
+exact keys avoid aliasing a tuned tile onto a shape it was never timed on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Callable, Iterable
+
+# Heuristic defaults per op (clipped to the actual dims at lookup time).
+# 128 is the MXU edge; bk larger than bm/bn amortizes the accumulator
+# rescale epilogue over more contraction steps.
+_HEURISTICS: dict[str, tuple[int, int, int]] = {
+    "fused_fwd": (128, 128, 256),
+    "fused_dgrad": (128, 128, 256),
+    "fused_wgrad": (128, 128, 256),
+    "split_matmul": (256, 256, 512),
+}
+_FALLBACK = (128, 128, 128)
+
+# Candidate grid for active tuning (clipped + deduped per shape).
+CANDIDATES: tuple[tuple[int, int, int], ...] = (
+    (64, 64, 64), (64, 64, 128), (128, 128, 128), (128, 128, 256),
+    (128, 256, 256), (256, 128, 256), (256, 256, 256), (256, 256, 512),
+)
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def _key(op: str, backend: str, m: int, n: int, k: int) -> str:
+    return f"{op}:{backend}:{m}x{n}x{k}"
+
+
+def _clip(blocks: Iterable[int], dims: tuple[int, int, int]) -> tuple[int, int, int]:
+    bm, bn, bk = blocks
+    m, n, k = dims
+    return (max(1, min(bm, m)), max(1, min(bn, n)), max(1, min(bk, k)))
+
+
+class AutotuneCache:
+    """JSON-backed shape->blocks store. Thread-safe; lazy-loaded."""
+
+    def __init__(self, path: str | None = None):
+        self._path = path
+        self._entries: dict[str, list[int]] | None = None
+        self._lock = threading.Lock()
+
+    @property
+    def path(self) -> str:
+        return self._path or default_cache_path()
+
+    def _load(self) -> dict[str, list[int]]:
+        if self._entries is None:
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                self._entries = dict(data.get("entries", {}))
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def _save(self) -> None:
+        path = self.path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": self._entries}, f,
+                      indent=1, sort_keys=True)
+        os.replace(tmp, path)
+
+    def get(self, op: str, backend: str, m: int, n: int,
+            k: int) -> tuple[int, int, int] | None:
+        with self._lock:
+            hit = self._load().get(_key(op, backend, m, n, k))
+        if hit is None:
+            return None
+        return _clip(hit, (m, n, k))
+
+    def put(self, op: str, backend: str, m: int, n: int, k: int,
+            blocks: tuple[int, int, int]) -> None:
+        with self._lock:
+            self._load()[_key(op, backend, m, n, k)] = list(blocks)
+            self._save()
+
+
+_GLOBAL = AutotuneCache()
+
+
+def get_blocks(op: str, m: int, n: int, k: int, *,
+               backend: str = "pallas_fused",
+               cache: AutotuneCache | None = None) -> tuple[int, int, int]:
+    """Cached blocks for (op, shape), else the clipped heuristic default.
+
+    Never tunes -- lookup is pure and cheap enough for the hot path.
+    """
+    cache = cache or _GLOBAL
+    hit = cache.get(op, backend, m, n, k)
+    if hit is not None:
+        return hit
+    return _clip(_HEURISTICS.get(op, _FALLBACK), (m, n, k))
+
+
+def autotune(op: str, make_fn: Callable[[int, int, int], Callable[[], object]],
+             m: int, n: int, k: int, *, backend: str = "pallas_fused",
+             candidates: Iterable[tuple[int, int, int]] | None = None,
+             iters: int = 3,
+             cache: AutotuneCache | None = None) -> tuple[tuple[int, int, int], float]:
+    """Time every candidate block triple and persist the fastest.
+
+    `make_fn(bm, bn, bk)` returns a zero-arg callable running the kernel to
+    completion (caller is responsible for block_until_ready). Returns
+    (best_blocks, best_seconds_per_call). Candidates that fail to build or
+    run (e.g. VMEM overflow on real TPU) are skipped.
+    """
+    cache = cache or _GLOBAL
+    cands = list(dict.fromkeys(
+        _clip(c, (m, n, k)) for c in (candidates or CANDIDATES)))
+    best: tuple[int, int, int] | None = None
+    best_t = float("inf")
+    for blocks in cands:
+        try:
+            fn = make_fn(*blocks)
+            fn()  # compile / warm up
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                fn()
+            t = (time.perf_counter() - t0) / iters
+        except Exception:  # noqa: BLE001 -- skip infeasible tile configs
+            continue
+        if t < best_t:
+            best, best_t = blocks, t
+    if best is None:
+        raise RuntimeError(f"autotune: no feasible candidate for {op} "
+                           f"{m}x{n}x{k}")
+    cache.put(op, backend, m, n, k, best)
+    return best, best_t

@@ -1,0 +1,324 @@
+"""Fused Pallas FP4 pipeline: clamp -> scale -> E2M1 quantize -> GEMM ->
+rescale in ONE pass over the activation (DESIGN.md §12).
+
+The split path (kernels/fp4_quant.py + kernels/fp4_matmul.py) costs three
+HBM round trips over A: the OCC clamp writes A_c, the quantizer reads A_c
+and writes A_q, the GEMM reads A_q. Here the clamp + token-wise scaling +
+the 15-way threshold chain run *inside* the GEMM's K-loop on the VMEM-
+resident activation tile, so the full-size tensor crosses HBM once (the
+row-scale pre-pass reads A too, but writes only M floats -- see §12 for
+the traffic accounting). Weights arrive pre-quantized on the E2M1 grid
+(codes); the (1/sa)(1/sw) outer-product rescale hits the f32 accumulator
+once, in the final-K-step epilogue.
+
+Four kernels:
+  * `_row_scale_kernel`  -- K-tiled row absmax of clip(A) -> sa (M,1),
+                            same underflow-floor semantics as
+                            core.quantize.absmax_scale;
+  * `_fused_fwd_kernel`  -- the fused quantize+GEMM described above;
+  * `_dgrad_kernel`      -- dA = g @ (W_q/sw)^T with the 1/sw fold-in on
+                            the g tile (STE through activation quant);
+  * `_wgrad_kernel`      -- dW = Q(clip(A)*sa)^T @ (g/sa), DGE derivative
+                            mask applied in the epilogue (paper Eq. 22).
+                            The activation is RE-quantized in-kernel from
+                            the raw tile, so the backward also never reads
+                            a materialized A_q.
+
+Ragged tiles: every grid axis uses `pl.cdiv`; out-of-bounds *writes* are
+masked by Pallas, but out-of-bounds *reads* are undefined (NaN-filled in
+interpret mode, garbage on hardware), so each kernel masks its contraction
+tail explicitly -- the threshold chain maps any pad value (NaN/inf
+included) onto the finite grid, and the opposing operand tile is zeroed,
+making pad products exactly 0.
+
+All kernels run in interpret mode on CPU (bit-faithful validation) and
+compile to Mosaic on TPU; block sizes come from kernels/autotune.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import formats
+
+# Mirrors core.quantize.absmax_scale: rows whose absmax is below this carry
+# no 4-bit-representable signal; their scale is forced to 1.
+_ABSMAX_FLOOR = 1e-30
+
+
+@functools.lru_cache(maxsize=None)
+def _chain(fmt_name: str):
+    """(v0, ((bound, delta), ...)) Python-float constants of the format's
+    threshold chain -- scalar immediates inside the kernels."""
+    fmt = formats.FORMATS[fmt_name]
+    values = np.asarray(fmt.values, np.float64)
+    bounds = np.asarray(fmt.boundaries, np.float64)
+    deltas = np.diff(values)
+    return float(values[0]), tuple(
+        (float(b), float(d)) for b, d in zip(bounds, deltas))
+
+
+def _round_to_grid(xs: jnp.ndarray, fmt_name: str) -> jnp.ndarray:
+    """Round-to-nearest on the format grid as a threshold-delta accumulation
+    (vector ops only; `>=` matches searchsorted(side="right") tie-breaking).
+    Any non-finite input lands on a finite grid value: NaN compares False
+    everywhere (-> v_min), +inf True everywhere (-> v_max)."""
+    v0, steps = _chain(fmt_name)
+    q = jnp.full(xs.shape, v0, jnp.float32)
+    for b, d in steps:
+        q = q + d * (xs >= b).astype(jnp.float32)
+    return q
+
+
+def _clamp(x: jnp.ndarray, lohi_ref) -> jnp.ndarray:
+    """clip(x, lo, hi) with lo/hi from the (1,2) bounds operand. With
+    lo=-inf/hi=+inf this is the identity (the no-OCC arms)."""
+    return jnp.minimum(jnp.maximum(x, lohi_ref[0, 0]), lohi_ref[0, 1])
+
+
+def _tail_mask(shape, axis: int, step, block: int, total: int):
+    """Validity mask for a contraction-axis tile: True where the global
+    index `step*block + local` is inside the real extent `total`."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, shape, axis)
+    return idx + step * block < total
+
+
+# ---------------------------------------------------------------------------
+# Row-scale pre-pass: sa = MAX / absmax(clip(A), axis=-1)
+# ---------------------------------------------------------------------------
+
+def _row_scale_kernel(a_ref, lohi_ref, s_ref, amax_ref, *, n_k, k_total, bk,
+                      max_value):
+    k_step = pl.program_id(1)
+
+    @pl.when(k_step == 0)
+    def _init():
+        amax_ref[...] = jnp.zeros_like(amax_ref)
+
+    x = _clamp(a_ref[...].astype(jnp.float32), lohi_ref)
+    x = jnp.where(_tail_mask(x.shape, 1, k_step, bk, k_total),
+                  jnp.abs(x), 0.0)
+    amax_ref[...] = jnp.maximum(amax_ref[...],
+                                jnp.max(x, axis=-1, keepdims=True))
+
+    @pl.when(k_step == n_k - 1)
+    def _epilogue():
+        amax = amax_ref[...]
+        s_ref[...] = max_value / jnp.where(amax > _ABSMAX_FLOOR, amax,
+                                           max_value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k",
+                                             "interpret", "fmt"))
+def fused_row_scale(a: jnp.ndarray, lohi: jnp.ndarray, *, block_m: int = 256,
+                    block_k: int = 512, interpret: bool = True,
+                    fmt: str = "e2m1") -> jnp.ndarray:
+    """a: (M, K), lohi: (1, 2) f32 clamp bounds -> token-wise scales (M, 1).
+
+    Bandwidth: reads A once, writes M floats. K is tiled (unlike
+    kernels/fp4_quant.py which keeps rows whole), so arbitrarily long rows
+    stay inside VMEM.
+    """
+    M, K = a.shape
+    bm, bk = min(block_m, M), min(block_k, K)
+    n_k = pl.cdiv(K, bk)
+    return pl.pallas_call(
+        functools.partial(_row_scale_kernel, n_k=n_k, k_total=K, bk=bk,
+                          max_value=formats.get_format(fmt).max_value),
+        grid=(pl.cdiv(M, bm), n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((1, 2), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
+        interpret=interpret,
+    )(a, lohi)
+
+
+# ---------------------------------------------------------------------------
+# Fused forward: Y = (Q(clip(A)*sa) @ W_q) / (sa x sw)
+# ---------------------------------------------------------------------------
+
+def _fused_fwd_kernel(a_ref, w_ref, sa_ref, sw_ref, lohi_ref, o_ref, acc_ref,
+                      *, n_k, k_total, bk, fmt_name):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _clamp(a_ref[...].astype(jnp.float32), lohi_ref)      # (bm, bk)
+    q = _round_to_grid(a * sa_ref[...], fmt_name)             # on-grid
+    # Contraction-tail masking: zero BOTH operands so pad products are 0
+    # even when the opposing pad is non-finite.
+    q = jnp.where(_tail_mask(q.shape, 1, k_step, bk, k_total), q, 0.0)
+    w = w_ref[...].astype(jnp.float32)                        # (bk, bn)
+    w = jnp.where(_tail_mask(w.shape, 0, k_step, bk, k_total), w, 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        q, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _epilogue():
+        inv = (1.0 / sa_ref[...]) * (1.0 / sw_ref[...])       # (bm,1)*(1,bn)
+        o_ref[...] = (acc_ref[...] * inv).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret", "fmt", "out_dtype"))
+def fused_quant_matmul(a: jnp.ndarray, w_q: jnp.ndarray, sa: jnp.ndarray,
+                       sw: jnp.ndarray, lohi: jnp.ndarray, *,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 256, interpret: bool = True,
+                       fmt: str = "e2m1", out_dtype=jnp.float32):
+    """a: (M,K) RAW activation; w_q: (K,N) on-grid; sa: (M,1); sw: (1,N);
+    lohi: (1,2) clamp bounds. One HBM pass over `a`; no A_q materialized."""
+    M, K = a.shape
+    K2, N = w_q.shape
+    assert K == K2 and sa.shape == (M, 1) and sw.shape == (1, N)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    n_k = pl.cdiv(K, bk)
+    return pl.pallas_call(
+        functools.partial(_fused_fwd_kernel, n_k=n_k, k_total=K, bk=bk,
+                          fmt_name=fmt),
+        grid=(pl.cdiv(M, bm), pl.cdiv(N, bn), n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, w_q, sa, sw, lohi)
+
+
+# ---------------------------------------------------------------------------
+# Fused dgrad: dA = g @ (W_q / sw)^T
+# ---------------------------------------------------------------------------
+
+def _dgrad_kernel(g_ref, w_ref, sw_ref, o_ref, acc_ref, *, n_n, n_total, bn):
+    n_step = pl.program_id(2)
+
+    @pl.when(n_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32) * (1.0 / sw_ref[...])  # (bm, bn)
+    g = jnp.where(_tail_mask(g.shape, 1, n_step, bn, n_total), g, 0.0)
+    w = w_ref[...].astype(jnp.float32)                        # (bkK, bn)
+    w = jnp.where(_tail_mask(w.shape, 1, n_step, bn, n_total), w, 0.0)
+    # contract over N: (bm, bn) x (bkK, bn) -> (bm, bkK)
+    acc_ref[...] += jax.lax.dot_general(
+        g, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(n_step == n_n - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret", "out_dtype"))
+def fused_dgrad(g: jnp.ndarray, w_q: jnp.ndarray, sw: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 256, block_k: int = 128,
+                interpret: bool = True, out_dtype=jnp.float32):
+    """g: (M,N) upstream cotangent; w_q: (K,N) on-grid; sw: (1,N).
+    Returns dA (M,K) = g @ W_dq^T with the dequant fold-in fused on the g
+    tile (sa cancels exactly -- STE, see core/fp4_gemm.py docstring)."""
+    M, N = g.shape
+    K, N2 = w_q.shape
+    assert N == N2 and sw.shape == (1, N)
+    bm, bk, bn = min(block_m, M), min(block_k, K), min(block_n, N)
+    n_n = pl.cdiv(N, bn)
+    return pl.pallas_call(
+        functools.partial(_dgrad_kernel, n_n=n_n, n_total=N, bn=bn),
+        grid=(pl.cdiv(M, bm), pl.cdiv(K, bk), n_n),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+            pl.BlockSpec((1, bn), lambda i, j, n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(g, w_q, sw)
+
+
+# ---------------------------------------------------------------------------
+# Fused wgrad: dW = (Q(clip(A)*sa)^T @ (g/sa)) * dge_mask   (paper Eq. 22)
+# ---------------------------------------------------------------------------
+
+def _wgrad_kernel(a_ref, sa_ref, g_ref, mask_ref, lohi_ref, o_ref, acc_ref,
+                  *, n_m, m_total, bmc, fmt_name):
+    m_step = pl.program_id(2)
+
+    @pl.when(m_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _clamp(a_ref[...].astype(jnp.float32), lohi_ref)      # (bmc, bkO)
+    q = _round_to_grid(a * sa_ref[...], fmt_name)
+    valid = _tail_mask(q.shape, 0, m_step, bmc, m_total)
+    q = jnp.where(valid, q, 0.0)
+    g = g_ref[...].astype(jnp.float32) * (1.0 / sa_ref[...])  # (bmc, bnO)
+    g = jnp.where(_tail_mask(g.shape, 0, m_step, bmc, m_total), g, 0.0)
+    # contract over M: (bmc, bkO) x (bmc, bnO) -> (bkO, bnO)
+    acc_ref[...] += jax.lax.dot_general(
+        q, g, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(m_step == n_m - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] * mask_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret", "fmt", "out_dtype"))
+def fused_wgrad(a: jnp.ndarray, sa: jnp.ndarray, g: jnp.ndarray,
+                dge_mask: jnp.ndarray, lohi: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 256,
+                interpret: bool = True, fmt: str = "e2m1",
+                out_dtype=jnp.float32):
+    """a: (M,K) RAW activation; sa: (M,1); g: (M,N) cotangent;
+    dge_mask: (K,N) = f'(W*sw) (ones for STE); lohi: (1,2).
+
+    Returns dW (K,N). The activation is re-quantized tile-by-tile inside
+    the contraction loop (identical chain to the forward), so neither pass
+    ever materializes A_q in HBM. The DGE derivative mask multiplies the
+    accumulator once, in the epilogue. sw cancels (App. C.2).
+    """
+    M, K = a.shape
+    M2, N = g.shape
+    assert M == M2 and sa.shape == (M, 1) and dge_mask.shape == (K, N)
+    bkO, bnO, bmc = min(block_m, K), min(block_n, N), min(block_k, M)
+    n_m = pl.cdiv(M, bmc)
+    return pl.pallas_call(
+        functools.partial(_wgrad_kernel, n_m=n_m, m_total=M, bmc=bmc,
+                          fmt_name=fmt),
+        grid=(pl.cdiv(K, bkO), pl.cdiv(N, bnO), n_m),
+        in_specs=[
+            pl.BlockSpec((bmc, bkO), lambda i, j, m: (m, i)),
+            pl.BlockSpec((bmc, 1), lambda i, j, m: (m, 0)),
+            pl.BlockSpec((bmc, bnO), lambda i, j, m: (m, j)),
+            pl.BlockSpec((bkO, bnO), lambda i, j, m: (i, j)),
+            pl.BlockSpec((1, 2), lambda i, j, m: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bkO, bnO), lambda i, j, m: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bkO, bnO), jnp.float32)],
+        interpret=interpret,
+    )(a, sa, g, dge_mask, lohi)
+
+
+def no_clamp_bounds() -> jnp.ndarray:
+    """(1,2) bounds that make the in-kernel clamp the identity."""
+    return jnp.asarray([[-jnp.inf, jnp.inf]], jnp.float32)

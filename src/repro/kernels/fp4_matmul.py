@@ -27,7 +27,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _matmul_kernel(a_ref, w_ref, sa_ref, sw_ref, o_ref, acc_ref, *, n_k: int):
+def _matmul_kernel(a_ref, w_ref, sa_ref, sw_ref, o_ref, acc_ref, *, n_k: int,
+                   k_total: int, bk: int):
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
@@ -36,6 +37,13 @@ def _matmul_kernel(a_ref, w_ref, sa_ref, sw_ref, o_ref, acc_ref, *, n_k: int):
 
     a = a_ref[...].astype(jnp.float32)          # (bm, bk) on-grid values
     w = w_ref[...].astype(jnp.float32)          # (bk, bn)
+    # Ragged-K masking: the tail tile's out-of-bounds reads are undefined
+    # (NaN in interpret mode, garbage on hardware); zero both operands so
+    # pad products contribute exactly 0 to the accumulator.
+    col = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(col + k_step * bk < k_total, a, 0.0)
+    row = jax.lax.broadcasted_iota(jnp.int32, w.shape, 0)
+    w = jnp.where(row + k_step * bk < k_total, w, 0.0)
     acc_ref[...] += jax.lax.dot_general(
         a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
@@ -59,7 +67,7 @@ def fp4_matmul_kernel(a_q: jnp.ndarray, w_q: jnp.ndarray, sa: jnp.ndarray,
     n_k = pl.cdiv(K, bk)
     grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), n_k)
     return pl.pallas_call(
-        functools.partial(_matmul_kernel, n_k=n_k),
+        functools.partial(_matmul_kernel, n_k=n_k, k_total=K, bk=bk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),

@@ -30,10 +30,17 @@ FP4_MAX = formats.E2M1.max_value
 _DELTAS = np.diff(_VALUES)  # value step across each boundary (14 scalars)
 
 
+# Denormal floor mirrored from core.quantize.absmax_scale: rows whose
+# absmax is below it would overflow the f32 scale (6/1.2e-38 = inf) and
+# carry no 4-bit-representable signal; their scale is forced to 1 so the
+# kernel matches the reference bit-for-bit on denormal inputs.
+_ABSMAX_FLOOR = 1e-30
+
+
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                       # (bm, K)
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)       # (bm, 1)
-    scale = FP4_MAX / jnp.where(amax > 0, amax, FP4_MAX)
+    scale = FP4_MAX / jnp.where(amax > _ABSMAX_FLOOR, amax, FP4_MAX)
     xs = x * scale
     # LUT as a threshold-delta accumulation (no gather, pure vector ops):
     # value = v_min + sum_i (v[i+1]-v[i]) * (xs > bound_i). All boundaries

@@ -9,7 +9,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import autotune as _at
 from . import flash_attention as _fa
+from . import fp4_fused as _fused
 from . import fp4_matmul as _mm
 from . import fp4_quant as _q
 from . import outlier as _ol
@@ -53,6 +55,82 @@ def fp4_matmul_pallas(a_q: jnp.ndarray, w_q: jnp.ndarray,
     if orig_shape is not None:
         out = out.reshape(*orig_shape[:-1], N)
     return out
+
+
+def _blocks(op: str, M: int, N: int, K: int,
+            blocks: tuple[int, int, int] | None) -> tuple[int, int, int]:
+    """Explicit blocks win; else the autotune cache / heuristic default."""
+    if blocks is not None:
+        return blocks
+    return _at.get_blocks(op, M, N, K)
+
+
+def fused_row_scale(a: jnp.ndarray, lohi: jnp.ndarray | None = None, *,
+                    fmt: str = "e2m1", block_m: int = 256,
+                    block_k: int = 512) -> jnp.ndarray:
+    """Token-wise absmax scales of clip(a): (M,K) -> (M,1). The cheap
+    pre-pass of the fused pipeline (reads A, writes M floats)."""
+    if lohi is None:
+        lohi = _fused.no_clamp_bounds()
+    return _fused.fused_row_scale(a, lohi, block_m=block_m, block_k=block_k,
+                                  interpret=INTERPRET, fmt=fmt)
+
+
+def fp4_matmul_fused(a: jnp.ndarray, w_q: jnp.ndarray, sa: jnp.ndarray,
+                     sw: jnp.ndarray, lohi: jnp.ndarray | None = None, *,
+                     fmt: str = "e2m1",
+                     blocks: tuple[int, int, int] | None = None):
+    """Fused clamp+quantize+GEMM+rescale forward (kernels/fp4_fused.py).
+
+    `a` is the RAW activation -- quantization happens inside the K-loop; no
+    A_q round-trips HBM. When an obs collector is active, quant-health
+    stats of the in-kernel quantization are recorded under a
+    "pallas_fused_quant" site via a jnp recompute of the (cheap,
+    elementwise) quantizer -- the fused kernel itself stays stats-free.
+    """
+    if lohi is None:
+        lohi = _fused.no_clamp_bounds()
+    M, K = a.shape
+    N = w_q.shape[1]
+    bm, bn, bk = _blocks("fused_fwd", M, N, K, blocks)
+    out = _fused.fused_quant_matmul(a, w_q, sa, sw, lohi, block_m=bm,
+                                    block_n=bn, block_k=bk,
+                                    interpret=INTERPRET, fmt=fmt)
+    from repro import obs
+    if obs.active() is not None:
+        from repro.core import quantize as _qz
+        a_c = jnp.clip(a.astype(jnp.float32), lohi[0, 0], lohi[0, 1])
+        q = _qz.lut_round(a_c * sa, fmt)
+        with obs.site("pallas_fused_quant"):
+            for key, val in _q.quant_stats(a_c, q, sa).items():
+                obs.record(key, val)
+    return out
+
+
+def fp4_dgrad_fused(g: jnp.ndarray, w_q: jnp.ndarray, sw: jnp.ndarray, *,
+                    blocks: tuple[int, int, int] | None = None):
+    """dA = g @ (W_q/sw)^T with the dequant fold-in fused on the g tile."""
+    M, N = g.shape
+    K = w_q.shape[0]
+    bm, bn, bk = _blocks("fused_dgrad", M, N, K, blocks)
+    return _fused.fused_dgrad(g, w_q, sw, block_m=bm, block_n=bn, block_k=bk,
+                              interpret=INTERPRET)
+
+
+def fp4_wgrad_fused(a: jnp.ndarray, sa: jnp.ndarray, g: jnp.ndarray,
+                    dge_mask: jnp.ndarray, lohi: jnp.ndarray | None = None, *,
+                    fmt: str = "e2m1",
+                    blocks: tuple[int, int, int] | None = None):
+    """dW = (Q(clip(a)*sa)^T @ (g/sa)) * dge_mask, re-quantizing the
+    activation tile-by-tile inside the contraction loop (paper Eq. 22)."""
+    if lohi is None:
+        lohi = _fused.no_clamp_bounds()
+    M, K = a.shape
+    N = g.shape[1]
+    bm, bn, bk = _blocks("fused_wgrad", K, N, M, blocks)
+    return _fused.fused_wgrad(a, sa, g, dge_mask, lohi, block_m=bm,
+                              block_n=bn, block_k=bk, interpret=INTERPRET,
+                              fmt=fmt)
 
 
 def outlier_clamp(x: jnp.ndarray, lo, hi, block_m: int = 256):

@@ -19,6 +19,40 @@ def fp4_matmul_ref(a_q: jnp.ndarray, w_q: jnp.ndarray, sa: jnp.ndarray,
     return acc / sa / sw
 
 
+def _clip(a: jnp.ndarray, lohi: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(a.astype(jnp.float32), lohi[0, 0], lohi[0, 1])
+
+
+def fused_row_scale_ref(a: jnp.ndarray, lohi: jnp.ndarray,
+                        fmt: str = "e2m1") -> jnp.ndarray:
+    """Token-wise scales of the clamped activation: (M,K) -> (M,1)."""
+    from repro.core import formats
+    return q_mod.absmax_scale(_clip(a, lohi), -1,
+                              formats.get_format(fmt).max_value)
+
+
+def fused_quant_matmul_ref(a: jnp.ndarray, w_q: jnp.ndarray, sa: jnp.ndarray,
+                           sw: jnp.ndarray, lohi: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused forward: quantize clip(a)*sa on the grid, GEMM
+    against the pre-quantized weight codes, outer-product rescale."""
+    a_q = q_mod.lut_round(_clip(a, lohi) * sa)
+    return fp4_matmul_ref(a_q, w_q, sa, sw)
+
+
+def fused_dgrad_ref(g: jnp.ndarray, w_q: jnp.ndarray,
+                    sw: jnp.ndarray) -> jnp.ndarray:
+    """dA = g @ (W_q / sw)^T in f32."""
+    return jnp.matmul(g.astype(jnp.float32),
+                      (w_q.astype(jnp.float32) / sw).T)
+
+
+def fused_wgrad_ref(a: jnp.ndarray, sa: jnp.ndarray, g: jnp.ndarray,
+                    dge_mask: jnp.ndarray, lohi: jnp.ndarray) -> jnp.ndarray:
+    """dW = (Q(clip(a)*sa)^T @ (g/sa)) * f'(W*sw)  (paper Eq. 22)."""
+    a_q = q_mod.lut_round(_clip(a, lohi) * sa)
+    return jnp.matmul(a_q.T, g.astype(jnp.float32) / sa) * dge_mask
+
+
 def outlier_clamp_ref(x: jnp.ndarray, lo: float, hi: float):
     """Fused clamp + residual. Returns (clamped, residual)."""
     c = jnp.clip(x, lo, hi)

@@ -92,6 +92,24 @@ def test_tensor_wise_higher_error_with_outliers():
     assert err_vec < err_ten
 
 
+@pytest.mark.parametrize("backend", ["bf16_sim", "int8"])
+def test_tensor_wise_scalar_rescale_matches_manual(backend):
+    """Tensor-wise (a_axis=w_axis=None) rescale must be the same
+    divide-by-scale chain as the vector-wise path -- the old code
+    special-cased scalar sa with a reciprocal multiply whose extra
+    rounding made this arm drift from kernels/ref.py."""
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((16, 32), k1, 3.0), _rand((32, 8), k2)
+    pol = TENSOR_WISE.replace(occ=False, compute="float32",
+                              gemm_backend=backend)
+    got = fp4_matmul(a, w, pol)
+    sa = quantize.absmax_scale(a, None, 6.0)
+    sw = quantize.absmax_scale(w, None, 6.0)
+    want = (quantize.lut_round(a * sa) @ quantize.lut_round(w * sw)) / sa / sw
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_fp4_linear_occ_dense_and_channel_and_bias():
     k1, k2, k3 = jax.random.split(KEY, 3)
     a = _rand((32, 64), k1)

@@ -1,0 +1,244 @@
+"""The `pallas_fused` backend (core/fp4_gemm.py + kernels/fp4_fused.py):
+forward and gradient parity against the autodiff-composed `bf16_sim` path,
+the custom-VJP wiring vs the paper's closed-form backward (Eq. 22), a
+finite-difference spot check of the DGE soft-step the wgrad mask comes
+from, and the fallback arms.
+
+Tolerance notes. E2M1 grid values and their pairwise products are exact in
+bf16, so the sim forward differs from the fused f32 accumulator only in
+summation order -> forward parity is tight (~1e-5 relative). The composed
+BACKWARD, however, multiplies cotangents through bf16 matmuls, so grad
+parity carries the bf16 rounding of the cotangent chain -> rtol 2e-2
+(same precedent as test_backward_matches_paper_eq22). The fused backward
+vs the closed-form jnp backward is f32-vs-f32 and tight again.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dge, formats, quantize
+from repro.core.fp4_gemm import fp4_matmul, fused_backend_eligible
+from repro.core.linear import fp4_linear
+from repro.core.policy import FP4_PAPER
+
+KEY = jax.random.PRNGKey(42)
+
+SIM = FP4_PAPER.replace(occ=False, compute="float32")
+FUSED = SIM.replace(gemm_backend="pallas_fused")
+
+# deliberately ragged: non-multiples of every default block size, K=129 odd
+SHAPES = [(8, 16, 4), (37, 129, 19), (64, 64, 64), (3, 1, 2)]
+
+
+def _rand(shape, key, scale=1.0):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+def _close(got, want, rtol, atol_rel=None):
+    got, want = np.asarray(got, np.float64), np.asarray(want, np.float64)
+    atol = (atol_rel if atol_rel is not None else rtol) * \
+        (1.0 + (np.max(np.abs(want)) if want.size else 0.0))
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+
+# --- forward parity --------------------------------------------------------
+
+@pytest.mark.parametrize("mkn", SHAPES)
+def test_forward_parity_vs_sim(mkn):
+    M, K, N = mkn
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((M, K), k1), _rand((K, N), k2)
+    _close(fp4_matmul(a, w, FUSED), fp4_matmul(a, w, SIM), rtol=2e-5)
+
+
+def test_forward_parity_with_clamp_bounds():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((24, 48), k1, 2.0), _rand((48, 8), k2)
+    bounds = (-1.23456, 0.98765)  # strictly between sample values: no ties
+    _close(fp4_matmul(a, w, FUSED, clamp_bounds=bounds),
+           fp4_matmul(a, w, SIM, clamp_bounds=bounds), rtol=2e-5)
+
+
+def test_forward_parity_batched_3d():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((2, 9, 33), k1), _rand((33, 7), k2)
+    yf, ys = fp4_matmul(a, w, FUSED), fp4_matmul(a, w, SIM)
+    assert yf.shape == (2, 9, 7)
+    _close(yf, ys, rtol=2e-5)
+
+
+# --- gradient parity vs the autodiff-composed path -------------------------
+
+def _grads(a, w, policy, clamp_bounds=None):
+    weights = jnp.cos(jnp.arange(w.shape[-1]).astype(jnp.float32))
+
+    def loss(a, w):
+        return jnp.sum(fp4_matmul(a, w, policy,
+                                  clamp_bounds=clamp_bounds) * weights)
+
+    return jax.grad(loss, argnums=(0, 1))(a, w)
+
+
+@pytest.mark.parametrize("mkn", SHAPES)
+def test_grad_parity_vs_sim(mkn):
+    M, K, N = mkn
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((M, K), k1), _rand((K, N), k2)
+    da_f, dw_f = _grads(a, w, FUSED)
+    da_s, dw_s = _grads(a, w, SIM)
+    _close(da_f, da_s, rtol=2e-2)   # bf16 cotangent rounding in sim bwd
+    _close(dw_f, dw_s, rtol=2e-2)
+
+
+def test_grad_parity_with_clamp_bounds():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((24, 48), k1, 2.0), _rand((48, 8), k2)
+    bounds = (-1.23456, 0.98765)  # off any sample value: clip subgradient
+    # ties (where fused's indicator mask deviates) cannot trigger
+    da_f, dw_f = _grads(a, w, FUSED, clamp_bounds=bounds)
+    da_s, dw_s = _grads(a, w, SIM, clamp_bounds=bounds)
+    _close(da_f, da_s, rtol=2e-2)
+    _close(dw_f, dw_s, rtol=2e-2)
+    # entries clamped away must carry exactly zero activation gradient
+    dead = (np.asarray(a) < bounds[0]) | (np.asarray(a) > bounds[1])
+    assert dead.any()
+    assert np.all(np.asarray(da_f)[dead] == 0.0)
+
+
+def test_grad_parity_batched_3d():
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((2, 9, 33), k1), _rand((33, 7), k2)
+    da_f, dw_f = _grads(a, w, FUSED)
+    da_s, dw_s = _grads(a, w, SIM)
+    assert da_f.shape == a.shape and dw_f.shape == w.shape
+    _close(da_f, da_s, rtol=2e-2)
+    _close(dw_f, dw_s, rtol=2e-2)
+
+
+def test_fused_backward_matches_paper_eq22_closed_form():
+    """f32-vs-f32: the custom VJP against the closed-form backward."""
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((16, 32), k1), _rand((32, 8), k2)
+    y, vjp = jax.vjp(lambda a, w: fp4_matmul(a, w, FUSED), a, w)
+    g = jnp.ones_like(y)
+    da, dw = vjp(g)
+    sa = quantize.absmax_scale(a, -1, 6.0)
+    sw = quantize.absmax_scale(w, 0, 6.0)
+    a_dq = quantize.lut_round(a * sa) / sa
+    w_dq = quantize.lut_round(w * sw) / sw
+    want_da = g @ w_dq.T
+    want_dw = (a_dq.T @ g) * dge.dge_derivative(w * sw, k=5.0, clip=3.0)
+    _close(da, want_da, rtol=1e-4)
+    _close(dw, want_dw, rtol=1e-4)
+
+
+# --- DGE finite-difference spot check --------------------------------------
+
+def test_dge_derivative_matches_soft_step_finite_difference():
+    """dge_derivative is the analytic derivative of the power-law soft step
+        f(x) = lo + delta * 0.5*(1 + sign(2t-1)*|2t-1|^(1/k)),  t=(x-lo)/delta
+    inside each quantization interval. Central-difference the soft step in
+    float64 at interior points (away from t=1/2 and the clip plateau) and
+    compare.
+    """
+    k = 5.0
+    los, deltas = (np.asarray(v, np.float64)
+                   for v in formats.intervals(formats.E2M1))
+    xs, want = [], []
+    for lo, delta in zip(los, deltas):
+        for t in (0.11, 0.27, 0.73, 0.9):
+            xs.append(lo + t * delta)
+            want.append((1.0 / k) * abs(2.0 * t - 1.0) ** (1.0 / k - 1.0))
+    xs, want = np.asarray(xs), np.asarray(want)
+    assert np.all(want < 3.0 * 0.9)  # interior points: clip never binds
+
+    def soft(x):
+        i = np.clip(np.searchsorted(los, x, side="right") - 1, 0,
+                    len(los) - 1)
+        t = (x - los[i]) / deltas[i]
+        return los[i] + deltas[i] * 0.5 * (
+            1.0 + np.sign(2 * t - 1) * np.abs(2 * t - 1) ** (1.0 / k))
+
+    h = 1e-7
+    fd = (soft(xs + h) - soft(xs - h)) / (2 * h)
+    np.testing.assert_allclose(fd, want, rtol=1e-4)
+
+    got = np.asarray(dge.dge_derivative(jnp.asarray(xs, jnp.float32),
+                                        k=k, clip=3.0))
+    np.testing.assert_allclose(got, fd, rtol=1e-3)
+
+
+def test_fused_wgrad_carries_dge_mask():
+    """Chain the FD-validated derivative through the fused dW: the custom
+    VJP's weight gradient must be elementwise proportional to f'(w*sw)."""
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((16, 32), k1), _rand((32, 8), k2)
+    dw = jax.grad(lambda w: jnp.sum(fp4_matmul(a, w, FUSED)))(w)
+    sa = quantize.absmax_scale(a, -1, 6.0)
+    sw = quantize.absmax_scale(w, 0, 6.0)
+    mask = np.asarray(dge.dge_derivative(w * sw, k=5.0, clip=3.0))
+    raw = np.asarray((quantize.lut_round(a * sa) / sa).T
+                     @ jnp.ones((16, 8), jnp.float32))
+    np.testing.assert_allclose(np.asarray(dw), raw * mask,
+                               rtol=1e-4, atol=1e-4 * np.abs(raw).max())
+
+
+# --- fallback arms ---------------------------------------------------------
+
+def test_fused_backend_eligibility_table():
+    assert fused_backend_eligible(FUSED)
+    assert fused_backend_eligible(FUSED.replace(w_quant="ste"))
+    assert not fused_backend_eligible(SIM)                       # bf16_sim
+    assert not fused_backend_eligible(FUSED.replace(w_quant="none"))
+    assert not fused_backend_eligible(FUSED.replace(a_quant="none"))
+    assert not fused_backend_eligible(FUSED.replace(a_axis=None,
+                                                    w_axis=None))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(w_quant="none"),                 # W8A4-style arm
+    dict(a_quant="none"),                 # W4A8-style arm
+    dict(a_axis=None, w_axis=None),       # tensor-wise granularity
+])
+def test_fallback_arms_bitwise_match_sim(kw):
+    """Ineligible pallas_fused policies must take the EXACT composed code
+    path bf16_sim takes -- bitwise, not just close."""
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((16, 32), k1), _rand((32, 8), k2)
+    y_f = fp4_matmul(a, w, FUSED.replace(**kw))
+    y_s = fp4_matmul(a, w, SIM.replace(**kw))
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_s))
+
+
+# --- fp4_linear OCC arms on the fused backend ------------------------------
+
+@pytest.mark.parametrize("comp", ["dense", "channel", "none"])
+def test_linear_occ_arms_forward_parity(comp):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = _rand((32, 64), k1)
+    a = a.at[:, 3].mul(80.0)  # channel outlier: the clamp must bind
+    w = _rand((64, 16), k2, 0.1)
+    b = _rand((16,), k3)
+    pol_f = FP4_PAPER.replace(occ_comp=comp, occ_threshold="exact",
+                              compute="float32",
+                              gemm_backend="pallas_fused")
+    pol_s = pol_f.replace(gemm_backend="bf16_sim")
+    _close(fp4_linear(a, w, b, policy=pol_f),
+           fp4_linear(a, w, b, policy=pol_s), rtol=1e-4)
+
+
+def test_linear_occ_clamp_only_arm_grad_flows():
+    """occ_comp="none" + fused backend is the in-kernel-clamp arm
+    (core/linear.py); gradients must be finite and nonzero."""
+    k1, k2 = jax.random.split(KEY)
+    a, w = _rand((16, 32), k1), _rand((32, 8), k2)
+    pol = FP4_PAPER.replace(occ_comp="none", occ_threshold="exact",
+                            compute="float32",
+                            gemm_backend="pallas_fused")
+    da, dw = jax.grad(lambda a, w: jnp.sum(fp4_linear(a, w, policy=pol)),
+                      argnums=(0, 1))(a, w)
+    assert np.all(np.isfinite(np.asarray(da)))
+    assert np.all(np.isfinite(np.asarray(dw)))
+    assert float(jnp.linalg.norm(dw)) > 0

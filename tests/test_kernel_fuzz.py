@@ -1,0 +1,289 @@
+"""Differential kernel-fuzz harness: every Pallas kernel vs its pure-jnp
+oracle (kernels/ref.py) in interpret mode.
+
+Two layers of coverage:
+  * a deterministic adversarial corpus (all-zeros, f32 denormals, rows
+    pinned to exact round-to-nearest tie points, 1e30-magnitude rows,
+    outlier-heavy mixes) crossed with ragged shapes -- odd M/K/N,
+    non-block-multiples, K=1 -- and deliberately tiny block sizes so every
+    kernel exercises its tail-masking paths;
+  * hypothesis-driven random sweeps (the deterministic shim in
+    tests/_hypothesis_shim.py when hypothesis isn't installed).
+
+Tolerances are stored per kernel in TOLERANCES. The quantizer-family
+kernels must match their oracles bit-exactly (same threshold chain, same
+underflow floor); the GEMM-family kernels accumulate per-K-block so only
+the f32 summation ORDER differs from the one-shot oracle matmul -- their
+atol is scaled by (1 + max|oracle|) to stay meaningful across the 1e-30
+.. 1e30 dynamic range of the corpus.
+
+Everything is seeded; the suite is fully deterministic run-to-run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:                                        # pragma: no cover
+    from _hypothesis_shim import given, settings, st, hnp
+
+from repro.core import quantize
+from repro.kernels import ops, ref
+
+SEED = 0xF4F4
+
+# --- stored per-kernel tolerances ------------------------------------------
+# rtol/atol feed np.testing.assert_allclose; atol is multiplied by
+# (1 + max|oracle|) so it tracks the output's scale (pure-relative kernels
+# keep atol=0). Exactness claims are load-bearing: the kernels reimplement
+# the reference math (threshold chain, absmax floor) rather than
+# approximating it, and this table is where that contract is pinned.
+TOLERANCES = {
+    "fp4_quant":       dict(rtol=0.0, atol=0.0),      # identical chain
+    "fused_row_scale": dict(rtol=0.0, atol=0.0),      # identical floor/max
+    "outlier_clamp":   dict(rtol=0.0, atol=0.0),      # pure clamp
+    "fp4_matmul":      dict(rtol=1e-5, atol=1e-6),    # K-blocked f32 sums
+    "fused_fwd":       dict(rtol=1e-5, atol=1e-6),
+    "fused_dgrad":     dict(rtol=1e-5, atol=1e-6),
+    "fused_wgrad":     dict(rtol=1e-5, atol=1e-6),
+    "flash_attention": dict(rtol=1e-4, atol=1e-5),    # online vs 2-pass softmax
+}
+
+
+def assert_close(name: str, got, want):
+    t = TOLERANCES[name]
+    got = np.asarray(got, np.float64)
+    want = np.asarray(want, np.float64)
+    scale = 1.0 + (float(np.max(np.abs(want))) if want.size else 0.0)
+    np.testing.assert_allclose(got, want, rtol=t["rtol"],
+                               atol=t["atol"] * scale,
+                               err_msg=f"kernel {name!r} diverged from oracle")
+
+
+# --- adversarial corpus ----------------------------------------------------
+
+_TIE_POINTS = np.array([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0], np.float32)
+
+
+def _corpus(shape: tuple[int, int], rng: np.random.Generator):
+    """Yield (tag, (M,K) f32 array) adversarial cases for one shape."""
+    normal = rng.standard_normal(shape).astype(np.float32)
+    yield "normal", normal
+    yield "zeros", np.zeros(shape, np.float32)
+    # f32 denormals: below the 1e-30 absmax floor, so scale must snap to 1
+    # and everything quantizes to 0 (not inf/0*inf garbage).
+    yield "denormal", np.float32(1e-39) * np.sign(normal + np.float32(0.25))
+    # rows whose absmax is EXACTLY max_value -> scale is exactly 1, and the
+    # remaining entries sit on round-to-nearest tie points: both sides must
+    # break ties identically (toward +inf, searchsorted side="right").
+    ties = rng.choice(_TIE_POINTS, size=shape).astype(np.float32)
+    ties *= np.where(rng.random(shape) < 0.5, -1.0, 1.0).astype(np.float32)
+    ties[..., -1] = np.float32(6.0)
+    yield "ties", ties
+    yield "huge", normal * np.float32(1e30)
+    # outlier-heavy: unit-scale body with a sparse 1e3 spike population --
+    # the regime OCC clamping targets (post-clamp outliers when lohi is
+    # finite, scale-blowup stress when it isn't).
+    outl = normal.copy()
+    spikes = rng.random(shape) < 0.05
+    outl[spikes] = (1e3 * np.sign(outl)[spikes]).astype(np.float32)
+    yield "outliers", outl
+
+
+_QUANT_SHAPES = [(1, 1), (1, 7), (3, 1), (37, 65), (64, 128), (130, 257)]
+_MNK_SHAPES = [(1, 1, 1), (7, 1, 5), (7, 3, 5), (37, 129, 19), (64, 64, 64),
+               (65, 33, 130)]
+_LOHI_CASES = [None, (-2.5, 2.5)]
+
+
+def _lohi_arr(lohi):
+    if lohi is None:
+        return jnp.asarray([[-jnp.inf, jnp.inf]], jnp.float32)
+    return jnp.asarray([list(lohi)], jnp.float32)
+
+
+def _grid_weights(K: int, N: int, rng: np.random.Generator):
+    """(w_q on-grid, sw (1,N)) from a random bf16-ish weight."""
+    w = rng.standard_normal((K, N)).astype(np.float32)
+    sw = np.asarray(quantize.absmax_scale(jnp.asarray(w), 0, 6.0))
+    w_q = np.asarray(quantize.lut_round(jnp.asarray(w * sw)))
+    return jnp.asarray(w_q), jnp.asarray(sw)
+
+
+# --- quantizer family: bit-exact vs oracle ---------------------------------
+
+@pytest.mark.parametrize("shape", _QUANT_SHAPES)
+def test_fp4_quant_fuzz(shape):
+    rng = np.random.default_rng(SEED)
+    for tag, x in _corpus(shape, rng):
+        q, s = ops.fp4_quantize(jnp.asarray(x), block_m=16)
+        qr, sr = ref.fp4_quant_ref(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(sr),
+                                      err_msg=f"fp4_quant scale [{tag}]")
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr),
+                                      err_msg=f"fp4_quant values [{tag}]")
+        assert np.all(np.isfinite(np.asarray(q))), tag
+
+
+@pytest.mark.parametrize("shape", _QUANT_SHAPES)
+@pytest.mark.parametrize("lohi", _LOHI_CASES)
+def test_fused_row_scale_fuzz(shape, lohi):
+    rng = np.random.default_rng(SEED)
+    for tag, x in _corpus(shape, rng):
+        a = jnp.asarray(x)
+        got = ops.fused_row_scale(a, _lohi_arr(lohi), block_m=16, block_k=16)
+        want = ref.fused_row_scale_ref(a, _lohi_arr(lohi))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"fused_row_scale [{tag}]")
+
+
+@pytest.mark.parametrize("shape", _QUANT_SHAPES)
+def test_outlier_clamp_fuzz(shape):
+    rng = np.random.default_rng(SEED)
+    for tag, x in _corpus(shape, rng):
+        c, r = ops.outlier_clamp(jnp.asarray(x), -1.5, 2.0, block_m=16)
+        cr, rr = ref.outlier_clamp_ref(jnp.asarray(x), -1.5, 2.0)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(cr),
+                                      err_msg=f"outlier_clamp c [{tag}]")
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rr),
+                                      err_msg=f"outlier_clamp r [{tag}]")
+
+
+# --- GEMM family: blocked accumulation vs one-shot oracle ------------------
+
+@pytest.mark.parametrize("mnk", _MNK_SHAPES)
+def test_fp4_matmul_fuzz(mnk):
+    M, N, K = mnk
+    rng = np.random.default_rng(SEED + K)
+    w_q, sw = _grid_weights(K, N, rng)
+    for tag, x in _corpus((M, K), rng):
+        a = jnp.asarray(x)
+        a_q, sa = ref.fp4_quant_ref(a)
+        got = ops.fp4_matmul_pallas(a_q, w_q, sa, sw, block_m=16,
+                                    block_n=16, block_k=16)
+        want = ref.fp4_matmul_ref(a_q, w_q, sa, sw)
+        assert_close("fp4_matmul", got, want)
+
+
+@pytest.mark.parametrize("mnk", _MNK_SHAPES)
+@pytest.mark.parametrize("lohi", _LOHI_CASES)
+def test_fused_fwd_fuzz(mnk, lohi):
+    M, N, K = mnk
+    rng = np.random.default_rng(SEED + 7 * K)
+    w_q, sw = _grid_weights(K, N, rng)
+    bounds = _lohi_arr(lohi)
+    for tag, x in _corpus((M, K), rng):
+        a = jnp.asarray(x)
+        sa = ref.fused_row_scale_ref(a, bounds)
+        got = ops.fp4_matmul_fused(a, w_q, sa, sw, bounds,
+                                   blocks=(16, 16, 16))
+        want = ref.fused_quant_matmul_ref(a, w_q, sa, sw, bounds)
+        assert_close("fused_fwd", got, want)
+
+
+@pytest.mark.parametrize("mnk", _MNK_SHAPES)
+def test_fused_dgrad_fuzz(mnk):
+    M, N, K = mnk
+    rng = np.random.default_rng(SEED + 13 * N)
+    w_q, sw = _grid_weights(K, N, rng)
+    for tag, g_np in _corpus((M, N), rng):
+        g = jnp.asarray(g_np)
+        got = ops.fp4_dgrad_fused(g, w_q, sw, blocks=(16, 16, 16))
+        want = ref.fused_dgrad_ref(g, w_q, sw)
+        assert_close("fused_dgrad", got, want)
+
+
+@pytest.mark.parametrize("mnk", _MNK_SHAPES)
+@pytest.mark.parametrize("lohi", _LOHI_CASES)
+def test_fused_wgrad_fuzz(mnk, lohi):
+    M, N, K = mnk
+    rng = np.random.default_rng(SEED + 29 * M)
+    bounds = _lohi_arr(lohi)
+    # random DGE-shaped mask incl. exact zeros (clipped-interval edges)
+    mask_np = rng.uniform(0.0, 3.0, (K, N)).astype(np.float32)
+    mask_np[rng.random((K, N)) < 0.1] = 0.0
+    mask = jnp.asarray(mask_np)
+    g = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+    for tag, x in _corpus((M, K), rng):
+        a = jnp.asarray(x)
+        sa = ref.fused_row_scale_ref(a, bounds)
+        got = ops.fp4_wgrad_fused(a, sa, g, mask, bounds,
+                                  blocks=(16, 16, 16))
+        want = ref.fused_wgrad_ref(a, sa, g, mask, bounds)
+        assert_close("fused_wgrad", got, want)
+
+
+# --- flash attention (S must divide the blocks -- kernel contract) ---------
+
+@pytest.mark.parametrize("shape,blocks", [
+    ((1, 64, 2, 8), (16, 16)),
+    ((2, 128, 1, 16), (32, 64)),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_fuzz(shape, blocks, causal):
+    rng = np.random.default_rng(SEED)
+    B, S, H, D = shape
+    for scale in (1.0, 30.0):  # logits-saturation stress at 30x
+        q, k, v = (jnp.asarray(scale * rng.standard_normal(shape)
+                               .astype(np.float32)) for _ in range(3))
+        got = ops.flash_attention(q, k, v, causal=causal,
+                                  block_q=blocks[0], block_k=blocks[1])
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        assert_close("flash_attention", got, want)
+
+
+# --- hypothesis-driven sweeps ----------------------------------------------
+
+_ELEMS = st.floats(min_value=-1e4, max_value=1e4, width=32,
+                   allow_nan=False, allow_infinity=False)
+_SHAPES_2D = hnp.array_shapes(min_dims=2, max_dims=2, min_side=1,
+                              max_side=40)
+
+
+@settings(max_examples=15, deadline=None)
+@given(hnp.arrays(np.float32, _SHAPES_2D, elements=_ELEMS))
+def test_fp4_quant_property(x_np):
+    x = jnp.asarray(x_np)
+    q, s = ops.fp4_quantize(x, block_m=8)
+    qr, sr = ref.fp4_quant_ref(x)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+@settings(max_examples=10, deadline=None)
+@given(hnp.arrays(np.float32, _SHAPES_2D, elements=_ELEMS))
+def test_fused_fwd_property(a_np):
+    M, K = a_np.shape
+    rng = np.random.default_rng(SEED + M * 1000 + K)  # shape-keyed, seeded
+    N = int(rng.integers(1, 24))
+    w_q, sw = _grid_weights(K, N, rng)
+    bounds = _lohi_arr(None)
+    a = jnp.asarray(a_np)
+    sa = ref.fused_row_scale_ref(a, bounds)
+    got = ops.fp4_matmul_fused(a, w_q, sa, sw, bounds, blocks=(8, 8, 8))
+    want = ref.fused_quant_matmul_ref(a, w_q, sa, sw, bounds)
+    assert_close("fused_fwd", got, want)
+
+
+# --- determinism ------------------------------------------------------------
+
+def test_kernels_deterministic():
+    """Same input, same bits, twice -- no hidden RNG anywhere."""
+    rng = np.random.default_rng(SEED)
+    a = jnp.asarray(rng.standard_normal((37, 65)).astype(np.float32))
+    for _ in range(2):
+        runs = [np.asarray(ops.fp4_quantize(a, block_m=16)[0])
+                for _ in range(2)]
+        np.testing.assert_array_equal(runs[0], runs[1])
+    w_q, sw = _grid_weights(65, 19, rng)
+    sa = ref.fused_row_scale_ref(a, _lohi_arr(None))
+    outs = [np.asarray(ops.fp4_matmul_fused(a, w_q, sa, sw,
+                                            blocks=(16, 16, 16)))
+            for _ in range(2)]
+    np.testing.assert_array_equal(outs[0], outs[1])
