@@ -1,0 +1,127 @@
+"""Serve-engine throughput/latency columns for the BENCH report
+(DESIGN.md §13).
+
+Drives the continuous-batching ServeEngine at batch sizes {1, 8, 32}
+(oversubscribed ~1.5x so admission/queueing is exercised) and reports
+tokens/s plus p50/p99 time-to-first-token per configuration, paged and
+dense. Numbers from the CPU-sim smoke model calibrate the *engine
+overhead* (scheduling, page bookkeeping, host<->device sync), not model
+FLOPs.
+
+    PYTHONPATH=src:. python benchmarks/serve_bench.py [--fast] \
+        [--json serve_bench.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import get_policy
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+BATCH_SIZES = (1, 8, 32)
+
+
+def _bench_one(model, params, *, n_slots: int, n_requests: int,
+               prompt_len: int, gen_len: int, paged: bool,
+               page_size: int = 16, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    eng = ServeEngine(model, params, n_slots=n_slots,
+                      max_len=prompt_len + gen_len + 2,
+                      prefill_len=prompt_len, paged=paged,
+                      page_size=page_size)
+    # warmup: compile prefill + decode once, outside the timed region
+    wid = eng.submit(rng.integers(1, model.cfg.vocab_size,
+                                  size=prompt_len).tolist(), 2)
+    eng.run()
+    assert eng.poll(wid)["state"] == "done"
+
+    prompts = [rng.integers(1, model.cfg.vocab_size,
+                            size=int(rng.integers(prompt_len // 2,
+                                                  prompt_len + 1))).tolist()
+               for _ in range(n_requests)]
+    t0 = time.monotonic()
+    rids = [eng.submit(p, gen_len) for p in prompts]
+    res = eng.run()
+    wall = time.monotonic() - t0
+    eng.check_invariants()
+    assert all(res[r]["state"] == "done" for r in rids)
+
+    total_tokens = sum(len(res[r]["tokens"]) for r in rids)
+    ttfts = np.asarray([eng.poll(r)["ttft_s"] for r in rids])
+    return {
+        "mode": "paged" if paged else "dense",
+        "n_slots": n_slots, "n_requests": n_requests,
+        "gen_len": gen_len, "engine_steps": eng.step_count,
+        "wall_s": wall, "tokens": total_tokens,
+        "tok_per_s": total_tokens / wall,
+        "ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
+        "ttft_p99_ms": float(np.percentile(ttfts, 99) * 1e3),
+    }
+
+
+def run(csv_rows: list, *, arch: str = "llama2-400m", fast: bool = False,
+        prompt_len: int = 16, gen_len: int = 8) -> list[dict]:
+    cfg = get_config(arch, smoke=True).replace(cache_dtype="float32",
+                                               remat=False)
+    model = build_model(cfg, get_policy("fp4").replace(occ=False))
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    sizes = BATCH_SIZES[:2] if fast else BATCH_SIZES
+    rows = []
+    print(f"\n# Serve engine throughput/latency ({arch} smoke, fp4 occ=off, "
+          f"prompt<=~{prompt_len}, gen={gen_len})")
+    print(f"{'mode':6s} {'slots':>5s} {'reqs':>5s} {'steps':>6s} "
+          f"{'tok/s':>9s} {'ttft_p50_ms':>12s} {'ttft_p99_ms':>12s}")
+    for paged in (True, False):
+        for b in sizes:
+            r = _bench_one(model, params, n_slots=b,
+                           n_requests=max(b + b // 2, b + 1),
+                           prompt_len=prompt_len, gen_len=gen_len,
+                           paged=paged)
+            rows.append(r)
+            print(f"{r['mode']:6s} {r['n_slots']:5d} {r['n_requests']:5d} "
+                  f"{r['engine_steps']:6d} {r['tok_per_s']:9.1f} "
+                  f"{r['ttft_p50_ms']:12.1f} {r['ttft_p99_ms']:12.1f}")
+            tag = f"serve/{r['mode']}_b{b}"
+            csv_rows.append((f"{tag}_tok_per_s", 1e6 / max(r["tok_per_s"],
+                                                           1e-9),
+                             f"{r['tok_per_s']:.1f}"))
+            csv_rows.append((f"{tag}_ttft_p50_ms", 0.0,
+                             f"{r['ttft_p50_ms']:.1f}"))
+            csv_rows.append((f"{tag}_ttft_p99_ms", 0.0,
+                             f"{r['ttft_p99_ms']:.1f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-400m")
+    ap.add_argument("--fast", action="store_true",
+                    help="batch sizes {1,8} only (CI smoke)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--json", default=None,
+                    help="write per-config rows to this JSON file")
+    args = ap.parse_args()
+
+    csv_rows: list = []
+    rows = run(csv_rows, arch=args.arch, fast=args.fast,
+               prompt_len=args.prompt_len, gen_len=args.gen_len)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

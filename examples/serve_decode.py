@@ -1,46 +1,85 @@
-"""Batched serving demo: prefill a prompt batch through an FP4 model, then
-greedy-decode continuations against the KV cache (ring buffers for local
-layers, fp8 cache optional).
+"""Continuous-batching serving demo: submit a stream of ragged prompts to
+the ServeEngine (slot scheduler + paged fp8-capable KV cache), poll while
+it drains, and print per-request results with TTFT.
 
-    PYTHONPATH=src python examples/serve_decode.py [--arch gemma2-9b]
+    PYTHONPATH=src python examples/serve_decode.py [--arch llama2-400m]
+        [--dense] [--obs serve_health.jsonl]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core.policy import get_policy
 from repro.models import build_model
-from repro.serve.engine import greedy_generate
+from repro.obs import JsonlWriter
+from repro.serve import ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-9b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--arch", default="llama2-400m")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--dense", action="store_true",
+                    help="ring cache instead of paged KV")
+    ap.add_argument("--obs", default=None,
+                    help="write per-slot decode-health JSONL here")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=True)
-    model = build_model(cfg, get_policy("fp4").replace(occ_threshold="exact"))
+    # remat off: obs suspends collection inside remat regions, and full
+    # per-layer decode-health telemetry needs the unrolled execution mode
+    # (DESIGN.md §11); serving never rematerializes anyway.
+    cfg = get_config(args.arch, smoke=True).replace(remat=False)
+    pol = get_policy("fp4").replace(occ_threshold="exact",
+                                    obs_metrics=bool(args.obs))
+    model = build_model(cfg, pol)
     params, _ = model.init(jax.random.PRNGKey(0))
 
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 1,
-                                 cfg.vocab_size)
-    t0 = time.time()
-    out = greedy_generate(model, params, {"tokens": prompts},
-                          steps=args.gen_len,
-                          max_len=args.prompt_len + args.gen_len + 4)
-    dt = time.time() - t0
-    print(f"arch={args.arch} (smoke config), batch={args.batch}")
-    print(f"prompt[0]: {prompts[0, :8].tolist()}...")
-    print(f"generated[0]: {out[0].tolist()}")
-    total = args.batch * args.gen_len
-    print(f"{total} tokens in {dt:.1f}s ({total/dt:.1f} tok/s on CPU sim)")
+    writer = JsonlWriter(args.obs) if args.obs else None
+    eng = ServeEngine(model, params, n_slots=args.slots,
+                      max_len=args.prompt_len + args.gen_len + 4,
+                      prefill_len=args.prompt_len, paged=not args.dense,
+                      page_size=args.page_size, obs_writer=writer)
+
+    rng = np.random.default_rng(0)
+    rids = []
+    for i in range(args.requests):
+        n = int(rng.integers(args.prompt_len // 3, args.prompt_len + 1))
+        prompt = rng.integers(1, cfg.vocab_size, size=n).tolist()
+        gen = int(rng.integers(args.gen_len // 2, args.gen_len + 1))
+        rids.append(eng.submit(prompt, gen))
+
+    mode = "dense ring" if args.dense else f"paged (page_size={args.page_size})"
+    print(f"arch={args.arch} (smoke config), {mode}, "
+          f"{args.requests} requests / {args.slots} slots")
+    t0 = time.monotonic()
+    while eng.busy:
+        eng.step()
+        running = sum(eng.poll(r)["state"] == "running" for r in rids)
+        done = sum(eng.poll(r)["state"] == "done" for r in rids)
+        print(f"\rstep {eng.step_count:4d}  running={running}  "
+              f"done={done}/{len(rids)}", end="", flush=True)
+    dt = time.monotonic() - t0
+    print()
+
+    total = 0
+    for rid in rids:
+        st = eng.poll(rid)
+        total += len(st["tokens"])
+        ttft = f"{st['ttft_s'] * 1e3:6.1f}ms" if st["ttft_s"] else "   n/a"
+        print(f"  req {rid}: {st['state']:7s} ttft={ttft} "
+              f"tokens={st['tokens'][:8]}{'...' if len(st['tokens']) > 8 else ''}")
+    print(f"{total} tokens in {dt:.1f}s ({total / dt:.1f} tok/s on CPU sim)")
+    eng.check_invariants()
+    if writer:
+        writer.close()
+        print(f"decode-health records -> {args.obs}")
 
 
 if __name__ == "__main__":

@@ -142,18 +142,39 @@ def _positional_spec(shape, offset: int, mesh) -> P:
     return P(*entries)
 
 
+def _pages_spec(shape, offset: int, mesh) -> P:
+    """Paged KV pool (n_pages, page_size, kv_heads, head_dim) at `offset`:
+    the kv-heads dim -> 'model' (tensor-parallel KV, matching the wk/wv
+    column sharding); page and page-offset dims replicate -- every model
+    shard must reach every page, only the head slice is local."""
+    sizes = _sizes(mesh)
+    entries: list = [None] * len(shape)
+    model = sizes.get("model", 0)
+    head_dim = offset + 2
+    if ("model" in mesh.axis_names and model > 1
+            and len(shape) > head_dim and shape[head_dim] % model == 0):
+        entries[head_dim] = "model"
+    return P(*entries)
+
+
 def cache_specs(cache, mesh):
     """PartitionSpec tree for a KV-cache pytree (serve/decode path).
 
-    Cache leaves are positional: (batch, seq, ...) normally, with one
-    extra leading layer-group dim under the "stack" key when the model
-    runs scan-over-layers (models/stacking.py). batch -> DP axes, cache
-    sequence dim -> 'model' (2D cache sharding, DESIGN.md §4); the
-    layer-group dim always replicates (it is the scan axis).
+    Dense cache leaves are positional: (batch, seq, ...) normally, with
+    one extra leading layer-group dim under the "stack" key when the
+    model runs scan-over-layers (models/stacking.py). batch -> DP axes,
+    cache sequence dim -> 'model' (2D cache sharding, DESIGN.md §4); the
+    layer-group dim always replicates (it is the scan axis). Paged pool
+    leaves (key `k_pages`/`v_pages`, serve/paged_cache.py) shard their
+    kv-heads dim over 'model' instead (`_pages_spec`).
     """
     def one(path, x):
         stacked = bool(path) and isinstance(path[0], DictKey) \
             and path[0].key == "stack"
+        paged = bool(path) and isinstance(path[-1], DictKey) \
+            and path[-1].key.endswith("_pages")
+        if paged:
+            return _pages_spec(x.shape, 1 if stacked else 0, mesh)
         return _positional_spec(x.shape, 1 if stacked else 0, mesh)
     return tree_map_with_path(one, cache)
 

@@ -172,12 +172,51 @@ def sliding_window_attention(q, k, v, q_pos, kv_pos, *, window,
     return out.reshape(B, Sp, H, Dh)[:, :S]
 
 
+def paged_attention(q, k_pages, v_pages, page_table, q_pos, seq_lens, *,
+                    window=None, softcap=None):
+    """Decode-time attention against a paged KV cache (DESIGN.md §13).
+
+    Gather-by-page-table reference path: the slot's pages are gathered
+    into a dense (B, P*page_size, Hkv, Dh) view and handed to
+    `dense_attention` -- positions are implicit in the paged layout
+    (entry j of the gathered view is absolute position j), so validity
+    is just `table entry >= 0 and j < seq_len`. Single-request decode
+    against a contiguous cache should keep using `dense_attention`
+    directly (no gather). A Pallas gather kernel can later replace the
+    materialized view without touching callers.
+
+    q: (B,1,H,Dh); k_pages/v_pages: (N, page_size, Hkv, Dh);
+    page_table: (B,P) int32, -1 = unallocated (page 0 is the reserved
+    trash page and never appears in a table); q_pos: (B,1) absolute
+    positions; seq_lens: (B,) valid cache entries per slot.
+    """
+    B, P = page_table.shape
+    ps = k_pages.shape[1]
+    pt = jnp.maximum(page_table, 0)
+    k = k_pages[pt].reshape(B, P * ps, *k_pages.shape[2:])
+    v = v_pages[pt].reshape(B, P * ps, *v_pages.shape[2:])
+    kv_pos = jnp.broadcast_to(jnp.arange(P * ps, dtype=jnp.int32),
+                              (B, P * ps))
+    valid = jnp.repeat(page_table > 0, ps, axis=1)      # page-major order
+    valid &= kv_pos < seq_lens[:, None]
+    kv_pos = jnp.where(valid, kv_pos, -1)
+    return dense_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                           q_pos, kv_pos, causal=True, window=window,
+                           softcap=softcap)
+
+
 def attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
               softcap=None, kv_chunk: int | None = None):
     """Dispatcher. Chooses the sub-quadratic/banded path for training with a
-    window, the chunked path for long KV, dense otherwise."""
+    window, the chunked path for long KV, dense otherwise.
+
+    The banded path assumes batch-uniform positions (it reads row 0 of a
+    2D position array), so it is only taken for 1D positions -- ragged
+    left-padded prefill batches (per-row positions, serve scheduler)
+    fall through to the chunked/dense paths, whose masks are per-row."""
     Sq, Skv = q.shape[1], k.shape[1]
-    if window is not None and Sq == Skv and Sq > window:
+    if (window is not None and Sq == Skv and Sq > window
+            and q_pos.ndim == 1 and kv_pos.ndim == 1):
         return sliding_window_attention(q, k, v, q_pos, kv_pos, window=window,
                                         softcap=softcap)
     if kv_chunk is not None and Skv > 2 * kv_chunk and Sq > 1:

@@ -96,17 +96,39 @@ def init_attn_cache(cfg, layer, batch: int, max_len: int):
 def _ring_write(cache, k, v, positions):
     """Write (k, v, positions) for a full prefix into a ring-buffer cache.
     k/v: (B, S, Hkv, Dh); positions: (S,) or (B, S). Keeps the last `cap`
-    positions."""
-    if positions.ndim == 1:
-        positions = jnp.broadcast_to(positions[None], (k.shape[0],
-                                                       positions.shape[0]))
-    B, S = positions.shape
+    positions.
+
+    Ring slot == position % cap (not sequence index % cap): with ragged
+    left-padded prefill (per-batch positions, pads < 0) the later decode
+    steps index the ring by absolute position, so prefill must bucket by
+    position too. Pad entries land at slots (cap - pad)..(cap - 1) with
+    kv_pos = -1; real entries may later overwrite them, never each other
+    (positions within a row are consecutive, so any window of <= cap of
+    them is distinct mod cap)."""
     cap = cache["k"].shape[1]
+    if positions.ndim == 1:
+        # batch-uniform contiguous prefix: slot == position % cap
+        S = positions.shape[0]
+        take = min(S, cap)
+        slots = positions[S - take:].astype(jnp.int32) % cap
+        ck = cache["k"].at[:, slots].set(
+            k[:, S - take:].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(
+            v[:, S - take:].astype(cache["v"].dtype))
+        cpos = cache["kv_pos"].at[:, slots].set(
+            jnp.broadcast_to(positions[S - take:][None],
+                             (k.shape[0], take)))
+        return {"k": ck, "v": cv, "kv_pos": cpos}
+    B, S = positions.shape
     take = min(S, cap)
-    slots = jnp.arange(S - take, S, dtype=jnp.int32) % cap
-    ck = cache["k"].at[:, slots].set(k[:, S - take:].astype(cache["k"].dtype))
-    cv = cache["v"].at[:, slots].set(v[:, S - take:].astype(cache["v"].dtype))
-    cpos = cache["kv_pos"].at[:, slots].set(positions[:, S - take:])
+    pos_t = positions[:, S - take:].astype(jnp.int32)
+    slots = pos_t % cap                                       # (B, take)
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    ck = cache["k"].at[b_idx, slots].set(
+        k[:, S - take:].astype(cache["k"].dtype))
+    cv = cache["v"].at[b_idx, slots].set(
+        v[:, S - take:].astype(cache["v"].dtype))
+    cpos = cache["kv_pos"].at[b_idx, slots].set(pos_t)
     return {"k": ck, "v": cv, "kv_pos": cpos}
 
 
@@ -123,23 +145,110 @@ def attn_prefill(p, x, positions, cache, cfg, layer, policy: QuantPolicy):
 
 
 def attn_decode(p, x, cache, pos, cfg, layer, policy: QuantPolicy):
-    """x: (B,1,D); pos: scalar int32 current position; ring-buffer write."""
+    """x: (B,1,D); pos: scalar int32 current position, or (B,) int32 for
+    per-slot positions (continuous batching -- every slot of the batch is
+    at its own depth). Ring-buffer write at slot position % cap."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
-    q, k, v = _qkv(p, x, cfg, layer, policy, positions)
+    pos = jnp.asarray(pos, jnp.int32)
     cap = cache["k"].shape[1]
-    idx = pos % cap
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, idx, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, idx, 0, 0))
-    cpos = jax.lax.dynamic_update_slice(cache["kv_pos"], positions, (0, idx))
+    if pos.ndim == 0:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q, k, v = _qkv(p, x, cfg, layer, policy, positions)
+        idx = pos % cap
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["kv_pos"], positions,
+                                            (0, idx))
+    else:
+        positions = pos[:, None]                              # (B,1)
+        q, k, v = _qkv(p, x, cfg, layer, policy, positions)
+        b_idx = jnp.arange(B, dtype=jnp.int32)
+        idx = pos % cap
+        ck = cache["k"].at[b_idx, idx].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[b_idx, idx].set(v[:, 0].astype(cache["v"].dtype))
+        cpos = cache["kv_pos"].at[b_idx, idx].set(pos)
     out = attn_mod.dense_attention(
         q, ck.astype(q.dtype), cv.astype(q.dtype), positions, cpos,
         causal=True, window=layer.get("window"), softcap=cfg.attn_softcap)
     out = out.reshape(B, 1, -1)
     y = fp4_linear(out, p["wo"], policy=policy, name="wo")
     return y, {"k": ck, "v": cv, "kv_pos": cpos}
+
+
+# ===========================================================================
+# Paged KV cache paths (serve engine; DESIGN.md §13). Storage lives in
+# per-layer page pools (n_pages, page_size, Hkv, Dh); the page table and
+# per-slot lengths are owned by serve/paged_cache.py on the host. Page 0
+# is the trash page: padded / inactive writes are routed there.
+# ===========================================================================
+
+def init_attn_pages(cfg, n_pages: int, page_size: int):
+    dh = cfg.resolved_head_dim
+    dt = CACHE_DTYPES[cfg.cache_dtype]
+    return {
+        "k_pages": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, dh), dt),
+        "v_pages": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, dh), dt),
+    }
+
+
+def _paged_write(pages, k, v, page_table, positions, active=None):
+    """Scatter (k, v) into the layer's page pool by absolute position.
+
+    k/v: (B,S,Hkv,Dh); page_table: (B,P) int32; positions: (B,S) int32
+    (pads < 0). Writes for invalid positions -- pad, unmapped page, or
+    inactive slot -- go to flat row 0 (the trash page), keeping the
+    scatter shape-stable under jit. Distinct slots own distinct pages,
+    so real destinations never collide across the batch."""
+    ps = pages["k_pages"].shape[1]
+    B, S = positions.shape
+    pclip = jnp.maximum(positions, 0)
+    page = jnp.take_along_axis(page_table, pclip // ps, axis=1)   # (B,S)
+    valid = (positions >= 0) & (page > 0)
+    if active is not None:
+        valid &= active[:, None]
+    dest = jnp.where(valid, page * ps + pclip % ps, 0).reshape(-1)
+    tail = pages["k_pages"].shape[2:]
+    kf = pages["k_pages"].reshape(-1, *tail)
+    vf = pages["v_pages"].reshape(-1, *tail)
+    kf = kf.at[dest].set(k.reshape(B * S, *tail).astype(kf.dtype))
+    vf = vf.at[dest].set(v.reshape(B * S, *tail).astype(vf.dtype))
+    shape = pages["k_pages"].shape
+    return {"k_pages": kf.reshape(shape), "v_pages": vf.reshape(shape)}
+
+
+def attn_prefill_paged(p, x, positions, pages, page_table, cfg, layer,
+                       policy: QuantPolicy):
+    """Prompt processing into a paged cache. positions: (B,S), pads < 0
+    (left-padded ragged batches); attention over the prompt itself runs
+    on the in-flight k/v (no page read-back)."""
+    q, k, v = _qkv(p, x, cfg, layer, policy, positions)
+    out = attn_mod.attention(
+        q, k, v, positions, positions, causal=layer.get("causal", True),
+        window=layer.get("window"), softcap=cfg.attn_softcap,
+        kv_chunk=cfg.attn_chunk)
+    out = out.reshape(*x.shape[:2], -1)
+    y = fp4_linear(out, p["wo"], policy=policy, name="wo")
+    return y, _paged_write(pages, k, v, page_table, positions)
+
+
+def attn_decode_paged(p, x, pages, pos, page_table, active, cfg, layer,
+                      policy: QuantPolicy):
+    """One token per slot against the paged cache. x: (B,1,D); pos: (B,)
+    per-slot write position; active: (B,) bool slot mask."""
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]                                  # (B,1)
+    q, k, v = _qkv(p, x, cfg, layer, policy, positions)
+    pages = _paged_write(pages, k, v, page_table, positions, active)
+    seq_lens = jnp.where(active, pos + 1, 0)
+    out = attn_mod.paged_attention(
+        q, pages["k_pages"], pages["v_pages"], page_table, positions,
+        seq_lens, window=layer.get("window"), softcap=cfg.attn_softcap)
+    out = out.reshape(B, 1, -1)
+    y = fp4_linear(out, p["wo"], policy=policy, name="wo")
+    return y, pages
 
 
 # ===========================================================================
@@ -313,6 +422,42 @@ def layer_prefill(p, x, positions, cache, cfg, layer: dict,
     if "ln_post_ffn" in p:
         f = _norm(p["ln_post_ffn"], f, cfg)
     return x + f, cache
+
+
+def layer_prefill_paged(p, x, positions, pages, page_table, cfg, layer: dict,
+                        policy: QuantPolicy):
+    h = _norm(p["ln_attn"], x, cfg)
+    a, pages = attn_prefill_paged(p["attn"], h, positions, pages, page_table,
+                                  cfg, layer, policy)
+    if "ln_post_attn" in p:
+        a = _norm(p["ln_post_attn"], a, cfg)
+    x = x + a
+    h = _norm(p["ln_ffn"], x, cfg)
+    if layer.get("ffn") == "moe":
+        f, _ = moe_apply(p["ffn"], h, cfg, policy)
+    else:
+        f = ffn_apply(p["ffn"], h, cfg, policy)
+    if "ln_post_ffn" in p:
+        f = _norm(p["ln_post_ffn"], f, cfg)
+    return x + f, pages
+
+
+def layer_decode_paged(p, x, pages, pos, page_table, active, cfg,
+                       layer: dict, policy: QuantPolicy):
+    h = _norm(p["ln_attn"], x, cfg)
+    a, pages = attn_decode_paged(p["attn"], h, pages, pos, page_table,
+                                 active, cfg, layer, policy)
+    if "ln_post_attn" in p:
+        a = _norm(p["ln_post_attn"], a, cfg)
+    x = x + a
+    h = _norm(p["ln_ffn"], x, cfg)
+    if layer.get("ffn") == "moe":
+        f, _ = moe_apply(p["ffn"], h, cfg, policy)
+    else:
+        f = ffn_apply(p["ffn"], h, cfg, policy)
+    if "ln_post_ffn" in p:
+        f = _norm(p["ln_post_ffn"], f, cfg)
+    return x + f, pages
 
 
 def layer_decode(p, x, cache, pos, cfg, layer: dict, policy: QuantPolicy):

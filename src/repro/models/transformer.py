@@ -305,8 +305,82 @@ class CausalLM:
             new_layers.append(c)
         return x, {"layers": new_layers}
 
+    # ---------------------------------------------------------- paged serve
+    @property
+    def supports_paged(self) -> bool:
+        """Paged decode covers attention-only plans (dense/MoE FFNs; no
+        MLA latent caches, no SSM/RWKV state carries)."""
+        return (not self.cfg.use_mla
+                and all(l["kind"] == "attn" for l in self.plan))
+
+    def _check_paged(self):
+        if not self.supports_paged:
+            raise NotImplementedError(
+                "paged KV serving needs an attention-only layer plan "
+                f"(got kinds {sorted({l['kind'] for l in self.plan})}, "
+                f"use_mla={self.cfg.use_mla})")
+
+    def init_paged_cache(self, n_pages: int, page_size: int):
+        """Per-layer page pools (k_pages/v_pages); the page table and slot
+        lengths live host-side in serve/paged_cache.py. Every layer gets
+        its own pool of `n_pages` pages (page 0 reserved as trash)."""
+        self._check_paged()
+        per_layer = [blocks.init_attn_pages(self.cfg, n_pages, page_size)
+                     for _ in self.plan]
+        if self.stacked:
+            g, n = self.group_size, self.n_groups
+            return {
+                "stack": [stacking.stack_trees([per_layer[k * g + p]
+                                                for k in range(n)])
+                          for p in range(g)],
+                "rest": per_layer[self._tail_start:],
+            }
+        return {"layers": per_layer}
+
+    def decode_step_paged(self, params, pages, tokens, pos, page_table,
+                          active):
+        """One token per slot against the paged cache. tokens: (B,1) int32;
+        pos: (B,) int32 per-slot write position; page_table: (B,P) int32;
+        active: (B,) bool. Returns (logits (B,V), new_pages)."""
+        self._check_paged()
+        cfg, policy = self.cfg, self.policy
+        x = embed_lookup(params["embed"], tokens, policy.compute_dtype)
+        if cfg.embed_scale_sqrt_d:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        apply_fn = lambda p, sp, x, c, layer: blocks.layer_decode_paged(
+            p, x, c, pos, page_table, active, cfg, layer, policy)
+        x, new_pages = self._run_serve(params, pages, x, apply_fn)
+        x = rms_norm(x, params["ln_f"], plus_one=cfg.norm_plus_one)
+        logits = jnp.matmul(x[:, 0], self._head_w(params),
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits, new_pages
+
+    def prefill_paged(self, params, batch, pages, page_table):
+        """Prompt processing into the paged cache. batch carries (B,S)
+        tokens plus (B,S) `positions` (pads < 0 for left-padded ragged
+        prompts). Returns (last-position logits (B,V), new_pages)."""
+        self._check_paged()
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        B, S = x.shape[:2]
+        positions = batch.get("positions",
+                              jnp.broadcast_to(
+                                  jnp.arange(S, dtype=jnp.int32), (B, S)))
+        apply_fn = lambda p, sp, x, c, layer: blocks.layer_prefill_paged(
+            p, x, positions, c, page_table, cfg, layer, self.policy)
+        x, new_pages = self._run_serve(params, pages, x, apply_fn)
+        x = rms_norm(x, params["ln_f"], plus_one=cfg.norm_plus_one)
+        logits = jnp.matmul(x[:, -1], self._head_w(params),
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits, new_pages
+
     def decode_step(self, params, cache, tokens, pos):
-        """tokens: (B,1) int32 (or embeds (B,1,D)); pos: scalar int32.
+        """tokens: (B,1) int32 (or embeds (B,1,D)); pos: scalar int32, or
+        (B,) int32 per-slot positions (attention-only plans).
         Returns (logits (B,V), new_cache)."""
         cfg, policy = self.cfg, self.policy
         if cfg.frontend == "embeddings" and tokens.ndim == 3:

@@ -1,0 +1,17 @@
+"""repro.serve -- serving stack (DESIGN.md §13).
+
+`engine` has the fixed-batch primitives (make_serve_step /
+greedy_generate, lowered by launch/dryrun) and the continuous-batching
+`ServeEngine`; `scheduler` and `paged_cache` hold the host-side slot and
+page bookkeeping.
+"""
+from .engine import (ServeEngine, greedy_generate, make_serve_step,
+                     serve_shardings)
+from .paged_cache import PageAllocator, PageTable, pages_needed
+from .scheduler import Request, SlotScheduler
+
+__all__ = [
+    "ServeEngine", "greedy_generate", "make_serve_step", "serve_shardings",
+    "PageAllocator", "PageTable", "pages_needed",
+    "Request", "SlotScheduler",
+]

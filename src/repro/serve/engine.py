@@ -1,19 +1,37 @@
-"""Serving: prefill + batched decode steps with sharded KV caches.
+"""Serving: continuous-batching decode engine + prefill/decode steps.
 
-`make_serve_step` returns the jitted single-token decode function the
-decode_32k / long_500k dry-run cells lower: one new token for every request
-in the batch against a seq_len-deep cache. Cache sharding: batch -> DP axes,
-cache sequence dim -> 'model' (2D; DESIGN.md §4), fp8 cache storage
-optional per config.
+Two layers:
+
+  * `make_serve_step` / `greedy_generate` -- the fixed-batch primitives
+    the decode_32k / long_500k dry-run cells lower (one new token for
+    every request in the batch against a seq_len-deep cache). Kept as
+    the lowering surface for launch/dryrun.
+  * `ServeEngine` -- the continuous-batching host engine (DESIGN.md §13):
+    slot-based scheduler (serve/scheduler.py), paged KV cache with a
+    host-side block allocator (serve/paged_cache.py), per-request
+    submit()/poll() API, prefill/decode interleaving, timeout/capacity
+    eviction. The jitted step signature is shape-stable: (n_slots,)
+    token/position vectors plus an active-slot mask, so admission and
+    completion never trigger recompilation.
+
+Cache sharding: batch -> DP axes, cache sequence dim -> 'model' (2D;
+DESIGN.md §4); paged pools shard the kv-heads dim over 'model'. fp8
+cache storage comes from cfg.cache_dtype as in the dense path.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import obs
 from repro.dist import sharding as shard_rules
+
+from .paged_cache import PageAllocator, PageTable, pages_needed
+from .scheduler import DONE, EVICTED, SlotScheduler
 
 
 def make_serve_step(model, mesh):
@@ -34,10 +52,27 @@ def make_serve_step(model, mesh):
 
 
 def serve_shardings(model, params, cache, mesh):
-    """(param shardings, cache shardings, token sharding)."""
-    _, axes = jax.eval_shape(lambda k: model.init(k),
-                             jax.random.PRNGKey(0))  # axes only
-    return None  # placeholder; launch/dryrun builds these directly
+    """(param shardings, cache shardings, token sharding) for a serve
+    deployment on `mesh`.
+
+    Param shardings come from the model's logical axes (recovered via an
+    abstract `model.init` -- no device allocation); cache shardings are
+    positional (dist/sharding.py cache rules, incl. paged `*_pages`
+    pools); tokens shard their batch dim over the DP axes.
+    """
+    axes_box = []
+
+    def _init(key):
+        p, axes = model.init(key)
+        axes_box.append(axes)     # static (strings); keep out of the trace
+        return p
+
+    jax.eval_shape(_init, jax.random.PRNGKey(0))
+    param_sh = shard_rules.param_shardings(axes_box[0], params, mesh)
+    cache_sh = shard_rules.cache_shardings(cache, mesh)
+    dps = shard_rules.data_axes(mesh)
+    tok_spec = P(dps if len(dps) > 1 else (dps[0] if dps else None))
+    return param_sh, cache_sh, NamedSharding(mesh, tok_spec)
 
 
 def greedy_generate(model, params, batch, steps: int, max_len: int,
@@ -84,3 +119,266 @@ def greedy_generate(model, params, batch, steps: int, max_len: int,
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         out.append(tok)
     return jnp.concatenate(out, axis=1)
+
+
+# ===========================================================================
+# Continuous-batching engine
+# ===========================================================================
+
+class ServeEngine:
+    """Continuous-batching greedy-decode engine over an FP4 model stack.
+
+    Host API:
+        eng = ServeEngine(model, params, n_slots=8, max_len=128)
+        rid = eng.submit([tok, tok, ...], max_new_tokens=16)
+        eng.step()            # one engine iteration (admit + decode)
+        eng.poll(rid)         # {"state", "tokens", ...}
+        eng.run()             # step() until all requests drain
+
+    `paged=True` (default) stores KV in per-layer page pools with a
+    host-side block allocator; `paged=False` keeps the dense per-slot
+    ring cache (same numerics -- the equivalence battery asserts
+    token-identical outputs between the two). Both modes require an
+    attention-only layer plan (model.supports_paged).
+    """
+
+    def __init__(self, model, params, *, n_slots: int = 8,
+                 max_len: int = 256, prefill_len: int | None = None,
+                 paged: bool = True, page_size: int = 16,
+                 n_pages: int | None = None, mesh=None, obs_writer=None,
+                 default_timeout_steps: int | None = None):
+        model._check_paged()          # both modes need per-slot positions
+        self.model = model
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.prefill_len = int(prefill_len or min(64, max_len))
+        self.paged = bool(paged)
+        self.obs_writer = obs_writer
+        self.obs_on = getattr(model.policy, "obs_metrics", False)
+        self.default_timeout_steps = default_timeout_steps
+        self.sched = SlotScheduler(n_slots)
+        self.step_count = 0
+        self._ttft_s: dict[int, float] = {}       # rid -> wall-clock TTFT
+        self._submit_s: dict[int, float] = {}
+        self.tokens_emitted = 0
+
+        if self.paged:
+            self._pages_per_slot = pages_needed(self.max_len, page_size)
+            if n_pages is None:
+                n_pages = self.n_slots * self._pages_per_slot + 1
+            self.allocator = PageAllocator(n_pages, page_size)
+            self.table = PageTable(self.allocator, self.n_slots,
+                                   self._pages_per_slot)
+            self.cache = model.init_paged_cache(n_pages, page_size)
+        else:
+            self.allocator = None
+            self.table = None
+            self.cache = model.init_cache(self.n_slots, self.max_len)
+
+        if mesh is not None:
+            p_sh, c_sh, _ = serve_shardings(model, params, self.cache, mesh)
+            self.params = jax.device_put(params, p_sh)
+            self.cache = jax.device_put(self.cache, c_sh)
+
+        self._build_steps()
+
+    # ------------------------------------------------------------- jitted fns
+    def _build_steps(self):
+        model, obs_on = self.model, self.obs_on
+
+        if self.paged:
+            def prefill(params, batch, pages, table_row):
+                return model.prefill_paged(params, batch, pages, table_row)
+
+            def decode(params, pages, tokens, pos, table, active):
+                with obs.collect(enabled=obs_on) as col:
+                    logits, pages = model.decode_step_paged(
+                        params, pages, tokens, pos, table, active)
+                health = col.harvest() if col is not None else {}
+                return logits, pages, health
+        else:
+            def prefill(params, batch, cache):
+                return model.prefill(params, batch, cache)
+
+            def decode(params, cache, tokens, pos, active):
+                with obs.collect(enabled=obs_on) as col:
+                    logits, cache = model.decode_step(params, cache,
+                                                      tokens, pos)
+                health = col.harvest() if col is not None else {}
+                return logits, cache, health
+
+            def insert(big, small, slot):
+                return jax.tree.map(lambda b, s: b.at[slot].set(s[0]),
+                                    big, small)
+            self._insert = jax.jit(insert)
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    # ----------------------------------------------------------------- submit
+    def submit(self, prompt, max_new_tokens: int,
+               timeout_steps: int | None = None) -> int:
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        if len(prompt) > self.prefill_len:
+            raise ValueError(f"prompt len {len(prompt)} > prefill_len "
+                             f"{self.prefill_len}")
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError("prompt + max_new_tokens exceeds max_len "
+                             f"{self.max_len}")
+        rid = self.sched.submit(
+            prompt, max_new_tokens, now=self.step_count,
+            timeout_steps=(self.default_timeout_steps if timeout_steps is None
+                           else timeout_steps))
+        self._submit_s[rid] = time.monotonic()
+        return rid
+
+    def poll(self, rid: int) -> dict:
+        st = self.sched.status(rid)
+        st["ttft_s"] = self._ttft_s.get(rid)
+        return st
+
+    @property
+    def busy(self) -> bool:
+        return self.sched.busy
+
+    def cancel(self, rid: int) -> bool:
+        req = self.sched.requests.get(rid)
+        slot = req.slot if req is not None else None
+        ok = self.sched.cancel(rid)
+        if ok and self.paged and slot is not None:
+            self.table.release(slot)
+        return ok
+
+    # ------------------------------------------------------------- admission
+    def _padded_prompt(self, prompt: list[int]):
+        """Left-pad to prefill_len: pads get position < 0 (masked as KV,
+        trash-paged on write); the last row position is always the final
+        prompt token, so last-position logits are valid for every slot."""
+        S, L = self.prefill_len, len(prompt)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, S - L:] = prompt
+        positions = (np.arange(S, dtype=np.int32) - (S - L))[None]
+        return {"tokens": jnp.asarray(toks),
+                "positions": jnp.asarray(positions)}
+
+    def _admit(self) -> None:
+        while True:
+            req = self.sched.admissible()
+            if req is None:
+                return
+            n_prompt_pages = (pages_needed(len(req.prompt),
+                                           self.allocator.page_size)
+                              if self.paged else 0)
+            if self.paged and self.allocator.available < n_prompt_pages:
+                return                        # head-of-line blocks on pages
+            slot = self.sched.place(req)
+            batch = self._padded_prompt(req.prompt)
+            if self.paged:
+                ok = self.table.reserve(slot, len(req.prompt))
+                assert ok, "reserve failed after availability check"
+                table_row = jnp.asarray(self.table.table[slot:slot + 1])
+                logits, self.cache = self._prefill(self.params, batch,
+                                                   self.cache, table_row)
+                self.table.advance(slot, len(req.prompt))
+            else:
+                small = self.model.init_cache(1, self.max_len)
+                logits, small = self._prefill(self.params, batch, small)
+                self.cache = self._insert(self.cache, small,
+                                          jnp.int32(slot))
+            tok = int(jax.device_get(jnp.argmax(logits, axis=-1))[0])
+            req.tokens.append(tok)
+            req.first_token_step = self.step_count
+            self._ttft_s[req.rid] = time.monotonic() - self._submit_s[req.rid]
+            self.tokens_emitted += 1
+            self._maybe_finish(req)
+
+    # ----------------------------------------------------------------- decode
+    def _evict(self, req, reason: str) -> None:
+        slot = req.slot
+        self.sched.finish(req, EVICTED, reason)
+        if self.paged:
+            self.table.release(slot)
+
+    def _maybe_finish(self, req) -> None:
+        if len(req.tokens) >= req.max_new_tokens:
+            slot = req.slot
+            self.sched.finish(req, DONE)
+            if self.paged:
+                self.table.release(slot)
+
+    def _decode_batch(self) -> dict:
+        running = list(self.sched.running())
+        if not running:
+            return {}
+        if self.paged:
+            for req in list(running):
+                if not self.table.reserve(req.slot, 1):
+                    self._evict(req, "cache capacity")
+            running = list(self.sched.running())
+            if not running:
+                return {}
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        for req in running:
+            tokens[req.slot, 0] = req.tokens[-1]
+            pos[req.slot] = req.pos
+            active[req.slot] = True
+        if self.paged:
+            logits, self.cache, health = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(self.table.table),
+                jnp.asarray(active))
+        else:
+            logits, self.cache, health = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(active))
+        nxt = np.asarray(jax.device_get(jnp.argmax(logits, axis=-1)))
+        for req in running:
+            req.tokens.append(int(nxt[req.slot]))
+            req.pos += 1
+            req.decode_steps += 1
+            self.tokens_emitted += 1
+            if self.paged:
+                self.table.advance(req.slot, 1)
+            self._maybe_finish(req)
+        return {"health": health, "running": running}
+
+    # ------------------------------------------------------------------- step
+    def step(self) -> None:
+        """One engine iteration: timeout eviction, admission (+prefill of
+        newly placed requests), then one batched decode step."""
+        for req in self.sched.timed_out():
+            self._evict(req, "timeout")
+        self._admit()
+        out = self._decode_batch()
+        if self.obs_writer is not None and out:
+            health = {}
+            if self.obs_on and out["health"]:
+                health = {k: float(v) for k, v in
+                          jax.device_get(out["health"]).items()}
+            for req in out["running"]:
+                self.obs_writer.write({
+                    "kind": "serve_decode_health",
+                    "engine_step": self.step_count, "slot": req.slot,
+                    "rid": req.rid, "pos": int(req.pos),
+                    "tokens_done": len(req.tokens), **health})
+        self.step_count += 1
+
+    def run(self, max_steps: int = 10_000) -> dict:
+        """step() until every submitted request drains (or max_steps)."""
+        steps = 0
+        while self.sched.busy and steps < max_steps:
+            self.step()
+            steps += 1
+        if self.sched.busy:
+            raise RuntimeError(f"requests still in flight after "
+                               f"{max_steps} steps")
+        return {rid: self.poll(rid) for rid in self.sched.requests}
+
+    # -------------------------------------------------------------- plumbing
+    def check_invariants(self) -> None:
+        self.sched.check_invariants()
+        if self.paged:
+            self.table.check_invariants()

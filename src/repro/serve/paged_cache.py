@@ -1,0 +1,162 @@
+"""Paged KV cache for the continuous-batching serve engine (DESIGN.md §13).
+
+Storage model (vLLM-style, adapted to the repro stack):
+
+  * Device side: every attention layer owns a pool of fixed-size pages
+    ``k_pages/v_pages: (n_pages, page_size, n_kv_heads, head_dim)`` in the
+    config cache dtype (bf16 / fp8-e4m3 / f32 -- same ``CACHE_DTYPES``
+    table as the dense ring cache). Page 0 is a reserved *trash* page:
+    writes for padded / inactive positions are routed there so the
+    scatter stays shape-stable under jit.
+  * Host side: a ``PageAllocator`` free-list hands out page ids (never 0)
+    and a per-slot page table ``(n_slots, max_pages_per_slot)`` int32
+    (-1 = unallocated) maps token position ``p`` of a slot to device row
+    ``table[slot, p // page_size] * page_size + p % page_size``. The page
+    table is plain numpy; the engine ships it to the device once per
+    step (shape-stable, so no recompilation).
+
+Positions are implicit: pages are allocated in order, so entry ``j`` of
+the slot's gathered KV view sits at absolute position ``j``. No kv_pos
+array is stored -- validity is ``table entry >= 0 and j < seq_len``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages required to store ``n_tokens`` cache entries."""
+    return max(0, -(-int(n_tokens) // int(page_size)))
+
+
+class PageAllocator:
+    """Host-side free-list over ``n_pages`` device pages.
+
+    Page 0 (``TRASH_PAGE``) is never handed out. ``alloc`` is
+    all-or-nothing: a request that does not fit leaves the free list
+    untouched and returns None, so the caller can keep the request
+    queued (or evict) without partial bookkeeping.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self._free: list[int] = list(range(n_pages - 1, 0, -1))
+        self._owned: set[int] = set()
+
+    # ------------------------------------------------------------------ api
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated(self) -> frozenset:
+        return frozenset(self._owned)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n pages, or None if they don't all fit (free list unchanged)."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            p = int(p)
+            if p == TRASH_PAGE:
+                raise ValueError("freeing the reserved trash page")
+            if p not in self._owned:
+                raise ValueError(f"double free / foreign page {p}")
+            self._owned.remove(p)
+            self._free.append(p)
+
+    def check_invariants(self) -> None:
+        """Free list and owned set partition pages 1..n-1 exactly."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate in free list"
+        assert not (free & self._owned), "page both free and owned"
+        assert free | self._owned == set(range(1, self.n_pages)), \
+            "pages leaked or fabricated"
+        assert TRASH_PAGE not in free and TRASH_PAGE not in self._owned
+
+
+class PageTable:
+    """Per-slot page table rows + sequence lengths (host numpy).
+
+    The device step consumes ``table``/``seq_lens`` verbatim; the engine
+    mutates them only between steps through this class, which keeps the
+    allocator and the table consistent (every table entry > 0 is owned
+    by the allocator until the slot is released).
+    """
+
+    def __init__(self, allocator: PageAllocator, n_slots: int,
+                 max_pages_per_slot: int):
+        self.allocator = allocator
+        self.n_slots = int(n_slots)
+        self.max_pages = int(max_pages_per_slot)
+        self.table = np.full((n_slots, self.max_pages), -1, np.int32)
+        self.seq_lens = np.zeros((n_slots,), np.int32)
+
+    # ---------------------------------------------------------------- slots
+    def slot_pages(self, slot: int) -> list[int]:
+        row = self.table[slot]
+        return [int(p) for p in row if p >= 0]
+
+    def reserve(self, slot: int, n_tokens: int) -> bool:
+        """Grow slot ``slot`` so positions [0, seq_lens+n_tokens) have
+        pages. All-or-nothing; False when the pool is exhausted."""
+        ps = self.allocator.page_size
+        have = len(self.slot_pages(slot))
+        need = pages_needed(int(self.seq_lens[slot]) + n_tokens, ps) - have
+        if need <= 0:
+            return True
+        if have + need > self.max_pages:
+            return False
+        pages = self.allocator.alloc(need)
+        if pages is None:
+            return False
+        self.table[slot, have:have + need] = pages
+        return True
+
+    def advance(self, slot: int, n_tokens: int = 1) -> None:
+        self.seq_lens[slot] += n_tokens
+
+    def release(self, slot: int) -> None:
+        """Return every page of the slot to the allocator and clear it."""
+        pages = self.slot_pages(slot)
+        if pages:
+            self.allocator.free(pages)
+        self.table[slot] = -1
+        self.seq_lens[slot] = 0
+
+    def check_invariants(self) -> None:
+        self.allocator.check_invariants()
+        seen: set[int] = set()
+        for s in range(self.n_slots):
+            row = self.table[s]
+            pages = [int(p) for p in row if p >= 0]
+            # pages are prefix-allocated: no -1 holes before a valid page
+            n = len(pages)
+            assert all(int(p) >= 0 for p in row[:n]), f"hole in slot {s}"
+            assert all(int(p) < 0 for p in row[n:]), f"hole in slot {s}"
+            for p in pages:
+                assert p != TRASH_PAGE, f"slot {s} maps the trash page"
+                assert p in self.allocator.allocated, \
+                    f"slot {s} dangles page {p}"
+                assert p not in seen, f"page {p} double-mapped"
+                seen.add(p)
+            assert pages_needed(int(self.seq_lens[s]),
+                                self.allocator.page_size) <= n, \
+                f"slot {s} has tokens beyond its pages"
+        # every owned page is mapped by exactly one slot
+        assert seen == set(self.allocator.allocated), \
+            "allocator owns pages no slot maps"

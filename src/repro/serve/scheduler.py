@@ -1,0 +1,147 @@
+"""Slot-based request scheduling for the continuous-batching serve engine.
+
+The scheduler is pure host-side bookkeeping: a FIFO admission queue, a
+fixed array of `n_slots` decode slots (the jitted step's batch dim --
+shape-stable by construction), and per-request lifecycle state. Device
+work (prefill, decode, page allocation) is driven by `ServeEngine`,
+which consults the scheduler for *what* to run each step.
+
+Request lifecycle:  QUEUED -> RUNNING -> (DONE | EVICTED)
+
+Eviction reasons: per-request decode-step timeout, cache-capacity
+exhaustion (the engine could not reserve the next page), or explicit
+`cancel`. Evicted requests keep whatever tokens they produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Iterator
+
+QUEUED, RUNNING, DONE, EVICTED = "queued", "running", "done", "evicted"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    timeout_steps: int | None = None     # decode steps before eviction
+    state: str = QUEUED
+    slot: int | None = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    pos: int = 0                         # next cache write position
+    decode_steps: int = 0
+    submit_step: int | None = None       # engine step at submit()
+    first_token_step: int | None = None  # engine step of first token (TTFT)
+    evict_reason: str | None = None
+
+    @property
+    def finished(self) -> bool:
+        return self.state in (DONE, EVICTED)
+
+
+class SlotScheduler:
+    """Admission queue + fixed decode slots + request registry."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(n_slots)
+        self.n_slots = int(n_slots)
+        self.slots: list[Request | None] = [None] * self.n_slots
+        self.queue: deque[Request] = deque()
+        self.requests: dict[int, Request] = {}
+        self._rid = itertools.count()
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, prompt, max_new_tokens: int, *, now: int,
+               timeout_steps: int | None = None) -> int:
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(max_new_tokens)
+        req = Request(rid=next(self._rid), prompt=prompt,
+                      max_new_tokens=int(max_new_tokens),
+                      timeout_steps=timeout_steps, submit_step=now)
+        self.requests[req.rid] = req
+        self.queue.append(req)
+        return req.rid
+
+    def admissible(self) -> Request | None:
+        """Head of the queue if a slot is free (engine then checks pages)."""
+        if not self.queue:
+            return None
+        return self.queue[0] if None in self.slots else None
+
+    def place(self, req: Request) -> int:
+        """Move the queue head into a free slot; returns the slot index."""
+        assert self.queue and self.queue[0] is req
+        slot = self.slots.index(None)
+        self.queue.popleft()
+        req.state, req.slot, req.pos = RUNNING, slot, len(req.prompt)
+        self.slots[slot] = req
+        return slot
+
+    def finish(self, req: Request, state: str = DONE,
+               reason: str | None = None) -> None:
+        assert req.state == RUNNING
+        req.state, req.evict_reason = state, reason
+        self.slots[req.slot] = None
+        req.slot = None
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a queued or running request. Running requests are marked
+        evicted; the engine frees their pages on its next step."""
+        req = self.requests.get(rid)
+        if req is None or req.finished:
+            return False
+        if req.state == QUEUED:
+            self.queue.remove(req)
+            req.state, req.evict_reason = EVICTED, "cancelled"
+        else:
+            self.finish(req, EVICTED, "cancelled")
+        return True
+
+    # -------------------------------------------------------------- queries
+    def running(self) -> Iterator[Request]:
+        return (r for r in self.slots if r is not None)
+
+    @property
+    def n_running(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or self.n_running > 0
+
+    def timed_out(self) -> list[Request]:
+        return [r for r in self.running()
+                if r.timeout_steps is not None
+                and r.decode_steps >= r.timeout_steps]
+
+    def status(self, rid: int) -> dict:
+        req = self.requests[rid]
+        return {
+            "rid": req.rid, "state": req.state, "tokens": list(req.tokens),
+            "evict_reason": req.evict_reason,
+            "submit_step": req.submit_step,
+            "first_token_step": req.first_token_step,
+        }
+
+    def check_invariants(self) -> None:
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                assert r.state == RUNNING and r.slot == i
+        assert all(r.state == QUEUED for r in self.queue)
+        running = {r.rid for r in self.running()}
+        queued = {r.rid for r in self.queue}
+        assert not (running & queued)
+        for r in self.requests.values():
+            if r.state == RUNNING:
+                assert r.rid in running
+            elif r.state == QUEUED:
+                assert r.rid in queued
+            else:
+                assert r.rid not in running | queued

@@ -1,0 +1,132 @@
+"""Property tests for the serve-side page allocator and page table
+(serve/paged_cache.py): no double-allocation, all pages returned on
+release, no dangling page-table entries -- driven by hypothesis (or the
+deterministic shim) through random alloc/free/reserve/release programs.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:                                        # pragma: no cover
+    from _hypothesis_shim import given, settings, st, hnp
+
+from repro.serve.paged_cache import (PageAllocator, PageTable, TRASH_PAGE,
+                                     pages_needed)
+
+# Entropy source compatible with both real hypothesis and the shim: a
+# float array in [0,1) drives op selection and op arguments.
+_OPS = hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=1,
+                                               min_side=1, max_side=120),
+                  elements=st.floats(min_value=0.0, max_value=0.999))
+
+
+def test_pages_needed():
+    assert pages_needed(0, 4) == 0
+    assert pages_needed(1, 4) == 1
+    assert pages_needed(4, 4) == 1
+    assert pages_needed(5, 4) == 2
+    assert pages_needed(17, 16) == 2
+
+
+# ------------------------------------------------------------ raw allocator
+
+@settings(max_examples=40, deadline=None)
+@given(_OPS)
+def test_allocator_program_invariants(ops):
+    alloc = PageAllocator(n_pages=17, page_size=4)
+    held: list[list[int]] = []
+    for u in np.asarray(ops, np.float64):
+        if u < 0.55 or not held:                      # alloc 0..4 pages
+            n = int(u * 1000) % 5
+            pages = alloc.alloc(n)
+            if pages is None:
+                assert n > alloc.available
+            else:
+                assert len(pages) == n
+                assert TRASH_PAGE not in pages
+                # no double allocation: disjoint from everything held
+                flat = {p for g in held for p in g}
+                assert not (set(pages) & flat)
+                assert len(set(pages)) == n
+                held.append(pages)
+        else:                                         # free one held group
+            idx = int(u * 1000) % len(held)
+            alloc.free(held.pop(idx))
+        alloc.check_invariants()
+    for g in held:                                    # full teardown
+        alloc.free(g)
+    alloc.check_invariants()
+    assert alloc.available == alloc.n_pages - 1       # everything returned
+
+
+def test_allocator_rejects_double_free_and_trash():
+    alloc = PageAllocator(n_pages=5, page_size=2)
+    pages = alloc.alloc(2)
+    alloc.free(pages)
+    with pytest.raises(ValueError):
+        alloc.free(pages)                             # double free
+    with pytest.raises(ValueError):
+        alloc.free([TRASH_PAGE])                      # reserved page
+    with pytest.raises(ValueError):
+        alloc.free([99])                              # foreign page
+
+
+def test_allocator_all_or_nothing():
+    alloc = PageAllocator(n_pages=4, page_size=2)     # 3 usable pages
+    assert alloc.alloc(4) is None
+    assert alloc.available == 3                       # nothing leaked
+    assert alloc.alloc(3) is not None
+    assert alloc.alloc(1) is None
+
+
+# ---------------------------------------------------------------- page table
+
+@settings(max_examples=40, deadline=None)
+@given(_OPS)
+def test_page_table_program_invariants(ops):
+    """reserve/advance/release interleavings across slots: entries never
+    dangle, release returns every page, growth is all-or-nothing."""
+    alloc = PageAllocator(n_pages=13, page_size=4)
+    table = PageTable(alloc, n_slots=3, max_pages_per_slot=4)
+    for u in np.asarray(ops, np.float64):
+        slot = int(u * 1000) % 3
+        op = int(u * 7919) % 3
+        if op == 0:                                   # grow by 1..5 tokens
+            n = 1 + int(u * 31) % 5
+            before = alloc.available
+            if not table.reserve(slot, n):
+                assert alloc.available == before      # all-or-nothing
+        elif op == 1 and table.seq_lens[slot] < 16:
+            if table.reserve(slot, 1):
+                table.advance(slot, 1)                # decode-style write
+        else:
+            table.release(slot)                       # completion/eviction
+        table.check_invariants()
+    for s in range(3):
+        table.release(s)
+    table.check_invariants()
+    assert alloc.available == alloc.n_pages - 1
+    assert (table.table == -1).all()
+
+
+def test_page_table_release_clears_slot():
+    alloc = PageAllocator(n_pages=9, page_size=2)
+    table = PageTable(alloc, n_slots=2, max_pages_per_slot=4)
+    assert table.reserve(0, 5)                        # 3 pages
+    table.advance(0, 5)
+    assert len(table.slot_pages(0)) == 3
+    table.release(0)
+    assert table.slot_pages(0) == []
+    assert table.seq_lens[0] == 0
+    assert alloc.available == 8
+    table.check_invariants()
+
+
+def test_page_table_respects_max_pages_per_slot():
+    alloc = PageAllocator(n_pages=32, page_size=2)
+    table = PageTable(alloc, n_slots=1, max_pages_per_slot=2)
+    assert table.reserve(0, 4)                        # fills both pages
+    assert not table.reserve(0, 5)                    # would need a third
+    table.check_invariants()

@@ -1,0 +1,110 @@
+"""Slot-scheduler unit tests + the engine-level fuzz: random
+submit/poll/cancel/step interleavings through a live ServeEngine, with the
+allocator/page-table/scheduler invariants checked after every transition
+(the `slow`-marked fuzz runs in the non-blocking CI job).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import BF16
+from repro.models import build_model
+from repro.serve import ServeEngine, SlotScheduler
+from repro.serve.scheduler import DONE, EVICTED, QUEUED, RUNNING
+
+POLICY = BF16.replace(compute="float32")
+
+
+# ------------------------------------------------------------ scheduler unit
+
+def test_fifo_admission_and_slot_reuse():
+    s = SlotScheduler(2)
+    r = [s.submit([1], 4, now=0) for _ in range(4)]
+    assert s.place(s.admissible()) == 0
+    assert s.place(s.admissible()) == 1
+    assert s.admissible() is None                     # slots full
+    s.finish(s.requests[r[0]])
+    req = s.admissible()
+    assert req.rid == r[2]                            # FIFO order
+    assert s.place(req) == 0                          # freed slot reused
+    s.check_invariants()
+
+
+def test_cancel_queued_and_running():
+    s = SlotScheduler(1)
+    r0 = s.submit([1], 4, now=0)
+    r1 = s.submit([2], 4, now=0)
+    s.place(s.admissible())
+    assert s.cancel(r1)                               # still queued
+    assert s.requests[r1].state == EVICTED
+    assert s.cancel(r0)                               # running
+    assert s.requests[r0].state == EVICTED
+    assert not s.cancel(r0)                           # already finished
+    assert not s.busy
+    s.check_invariants()
+
+
+def test_timeout_detection():
+    s = SlotScheduler(1)
+    rid = s.submit([1], 10, now=0, timeout_steps=2)
+    s.place(s.admissible())
+    assert not s.timed_out()
+    s.requests[rid].decode_steps = 2
+    assert [r.rid for r in s.timed_out()] == [rid]
+
+
+def test_status_vocabulary():
+    s = SlotScheduler(1)
+    rid = s.submit([1, 2], 3, now=5)
+    st = s.status(rid)
+    assert st["state"] == QUEUED and st["submit_step"] == 5
+    req = s.admissible()
+    s.place(req)
+    req.tokens.append(7)
+    req.first_token_step = 6
+    assert s.status(rid)["state"] == RUNNING
+    s.finish(req)
+    st = s.status(rid)
+    assert st["state"] == DONE and st["tokens"] == [7]
+    assert st["first_token_step"] == 6
+
+
+# -------------------------------------------------------------- engine fuzz
+
+@pytest.mark.slow
+def test_engine_fuzz_invariants():
+    """Random interleavings of submit/step/cancel against a real model:
+    scheduler + allocator + page-table invariants hold at every step, all
+    requests terminate, and pages fully drain back to the allocator."""
+    cfg = get_config("llama2-400m", smoke=True).replace(
+        cache_dtype="float32", remat=False)
+    model = build_model(cfg, POLICY)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    for trial in range(3):
+        eng = ServeEngine(model, params, n_slots=3, max_len=32,
+                          prefill_len=8, page_size=int(rng.integers(1, 6)),
+                          n_pages=int(rng.integers(8, 40)),
+                          default_timeout_steps=12)
+        rids = []
+        for _ in range(60):
+            u = rng.random()
+            if u < 0.35 and len(rids) < 12:
+                prompt = rng.integers(1, cfg.vocab_size,
+                                      size=int(rng.integers(1, 8))).tolist()
+                rids.append(eng.submit(prompt,
+                                       int(rng.integers(1, 10))))
+            elif u < 0.45 and rids:
+                eng.cancel(int(rng.choice(rids)))
+            else:
+                eng.step()
+            eng.check_invariants()
+            for rid in rids:
+                eng.poll(rid)                         # poll never corrupts
+        eng.run(max_steps=200)                        # drain the rest
+        eng.check_invariants()
+        assert eng.allocator.available == eng.allocator.n_pages - 1
+        states = {eng.poll(r)["state"] for r in rids}
+        assert states <= {"done", "evicted"}
