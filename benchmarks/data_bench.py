@@ -1,0 +1,146 @@
+"""Input-pipeline columns for the BENCH report (DESIGN.md §14).
+
+Measures tokens/s into the device and per-step input stall for three
+arms over the same shard corpus:
+
+  * blocking   -- PackedStream consumed inline (the pre-v2 pattern: the
+                  step waits for shard reads + packing on the critical
+                  path).
+  * prefetch   -- the same stream behind DevicePrefetcher (host packing
+                  and H2D staging overlap the step).
+  * synthetic  -- SyntheticStream baseline (no disk, generation cost
+                  only), for calibrating how much of the stall is I/O.
+
+The "step" is a jitted matmul stack sized by --step-ms so the bench
+reflects overlap against a realistic device occupancy, not an empty
+loop. Stall is time the consumer spends blocked acquiring the next
+batch; overlap = 1 - stall/step_wall.
+
+    PYTHONPATH=src:. python benchmarks/data_bench.py [--fast] \
+        [--json data_bench.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (DataConfig, DevicePrefetcher, PackedStream,
+                        ShardReader, SyntheticLM, SyntheticStream,
+                        write_synthetic_shards)
+
+
+def make_step(d: int, iters: int):
+    """A jitted device workload with tunable duration (matmul chain)."""
+    @jax.jit
+    def step(x, tokens):
+        s = jnp.sum(tokens).astype(jnp.float32) * 1e-9
+        for _ in range(iters):
+            x = jnp.tanh(x @ x) + s
+        return x
+    return step
+
+
+def bench_loader(loader, step_fn, x0, n_steps: int) -> dict:
+    """Drive `n_steps` (fetch -> step -> block) iterations; time the parts."""
+    x = x0
+    stall = 0.0
+    tokens = 0
+    t_start = time.perf_counter()
+    for _ in range(n_steps):
+        t0 = time.perf_counter()
+        pb = loader.next_batch()
+        toks = pb.arrays["tokens"]
+        stall += time.perf_counter() - t0
+        tokens += int(np.asarray(toks).size * pb.meta.get("pack_frac", 1.0))
+        x = step_fn(x, jnp.asarray(toks))
+        x.block_until_ready()
+    wall = time.perf_counter() - t_start
+    return {"wall_s": wall, "stall_ms_per_step": stall / n_steps * 1e3,
+            "tokens_per_s": tokens / wall,
+            "overlap": max(0.0, 1.0 - stall / wall)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small corpus / few steps (CI smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--seq", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--step-ms", type=float, default=20.0,
+                    help="target simulated device step duration")
+    args = ap.parse_args()
+
+    n_docs = 400 if args.fast else 4000
+    n_steps = 30 if args.fast else 200
+    cfg = DataConfig(vocab_size=4096, seq_len=args.seq,
+                     global_batch=args.batch, seed=0)
+    root = tempfile.mkdtemp(prefix="data_bench_")
+    try:
+        manifest = write_synthetic_shards(root, cfg, n_docs,
+                                          mean_len=300.0,
+                                          shard_tokens=1 << 20)
+        reader = ShardReader(manifest)
+
+        # calibrate the fake device step towards --step-ms
+        d, iters = 256, 4
+        step_fn = make_step(d, iters)
+        x0 = jnp.ones((d, d), jnp.float32)
+        dummy = jnp.zeros((args.batch, args.seq), jnp.int32)
+        step_fn(x0, dummy).block_until_ready()
+        t0 = time.perf_counter()
+        step_fn(x0, dummy).block_until_ready()
+        base_ms = (time.perf_counter() - t0) * 1e3
+        iters = max(1, int(iters * args.step_ms / max(base_ms, 1e-3)))
+        step_fn = make_step(d, iters)
+        step_fn(x0, dummy).block_until_ready()
+
+        def shard_stream():
+            return PackedStream(reader, seq_len=args.seq,
+                                batch_size=args.batch, seed=1)
+
+        arms = {}
+        arms["blocking"] = bench_loader(shard_stream(), step_fn, x0, n_steps)
+        pf = DevicePrefetcher(shard_stream(),
+                              place_fn=lambda a: {k: jnp.asarray(v)
+                                                  for k, v in a.items()},
+                              depth=2)
+        try:
+            arms["prefetch"] = bench_loader(pf, step_fn, x0, n_steps)
+            arms["prefetch"].update(pf.stats())
+        finally:
+            pf.stop()
+        arms["synthetic"] = bench_loader(
+            SyntheticStream(SyntheticLM(cfg)), step_fn, x0, n_steps)
+
+        print(f"BENCH data pipeline: seq={args.seq} batch={args.batch} "
+              f"steps={n_steps} corpus={reader.total_tokens/1e6:.1f}M tok")
+        hdr = (f"{'arm':<10} {'tok/s':>12} {'stall ms/step':>14} "
+               f"{'overlap':>8}")
+        print(hdr)
+        for name, r in arms.items():
+            print(f"{name:<10} {r['tokens_per_s']:>12.0f} "
+                  f"{r['stall_ms_per_step']:>14.3f} {r['overlap']:>8.3f}")
+        speed = (arms['blocking']['stall_ms_per_step'] /
+                 max(arms['prefetch']['stall_ms_per_step'], 1e-6))
+        print(f"prefetch stall reduction: {speed:.1f}x "
+              f"({arms['blocking']['stall_ms_per_step']:.2f}ms -> "
+              f"{arms['prefetch']['stall_ms_per_step']:.2f}ms per step)")
+
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"config": vars(args), "arms": arms}, f, indent=1)
+            print(f"wrote {args.json}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

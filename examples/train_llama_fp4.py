@@ -1,40 +1,71 @@
 """End-to-end driver: train a ~100M-param LLaMA with the full production
 stack -- FP4 policy, mixed-precision Adam, warmup+cosine schedule, atomic
-checkpointing with resume, NaN guards, straggler watchdog.
+checkpointing with resume (model AND data cursor), NaN guards, straggler
+watchdog, async input prefetch.
 
     PYTHONPATH=src python examples/train_llama_fp4.py \
-        [--steps 300] [--policy fp4] [--ckpt /tmp/fp4_ckpt] [--d-model 512]
+        [--data corpus/] [--steps 300] [--policy fp4] [--ckpt /tmp/fp4_ckpt]
 
-`--policy fp4_fused` runs every GeMM through the single-pass Pallas
-clamp+quantize+GEMM pipeline (`pallas_fused` backend, DESIGN.md §12) --
-interpret-mode simulation on CPU, so expect it slower here; on TPU it is
-the one-HBM-pass path. `fp4_fused_obs` adds the quant-health telemetry.
+CLI flags
+---------
+--steps N           total optimizer steps (default 300).
+--policy NAME       quantization preset from `repro.core.policy.PRESETS`
+                    (default "fp4"). Highlights: `fp4` = the paper recipe
+                    (W4A4 + DGE + OCC); `fp4_fused` runs every GeMM
+                    through the single-pass Pallas clamp+quantize+GEMM
+                    pipeline (DESIGN.md §12 -- interpret-mode simulation
+                    on CPU, the one-HBM-pass path on TPU); `fp4_obs` /
+                    `fp4_fused_obs` add quant-health telemetry; `bf16`
+                    disables quantization.
+--ckpt DIR          checkpoint directory (default /tmp/fp4_ckpt). Restart
+                    the same command to resume; with `--data` the input
+                    stream position is restored bit-exactly from the
+                    checkpoint manifest (DESIGN.md §14).
+--d-model D         model width (default 512; ~100M params with the
+                    defaults below).
+--layers L          transformer depth (default 8).
+--seq S             training sequence length (default 256).
+--batch B           global batch size in sequences (default 8).
+--data PATH         shard-corpus directory or manifest.json
+                    (docs/data_format.md). Batches then come from the
+                    resumable best-fit packing stream with segment-ID
+                    attention masks. Omit for the synthetic fallback
+                    stream (no files needed).
+--make-data N       with `--data DIR`: if DIR has no manifest yet, first
+                    materialize N synthetic documents as shards there
+                    (quick way to exercise the on-disk path; real corpora
+                    are written with `repro.data.ShardWriter`).
+--prefetch K        device prefetch read-ahead depth (default 2); the
+                    next batch is packed and staged on-device while the
+                    current step runs. `--prefetch 0` disables the
+                    background thread (blocking fetch -- the arm
+                    `benchmarks/data_bench.py` measures against).
+--obs-log PATH      write per-step quant-health JSONL here and arm the
+                    collapse sentinel (DESIGN.md §11): per-layer OCC
+                    clamp fraction / residual mass, scale extrema and
+                    underflow counts, quantize SNR, DGE mismatch, plus
+                    worst-site aggregates and input-pipeline health
+                    (data/stall_ms, data/queue_depth, data/pack_frac).
+                    On sentinel trip the trainer checkpoints and flips to
+                    a bf16-policy step function. Telemetry needs the
+                    unrolled execution mode, so this forces
+                    scan_layers=False (fine at example scale).
 
 ~100M params: d=512, L=8, ff=2048, vocab=32000 (tied). On CPU this runs a
 few hundred steps in minutes at seq 256 / batch 8 -- the shape of the real
 pretraining loop, scaled down.
-
-Quant-health logging (DESIGN.md §11): pass `--obs-log health.jsonl` to
-record per-step FP4 telemetry -- per-layer OCC clamp fraction and residual
-mass, quantization scale extrema and underflow counts, quantize/dequantize
-SNR, and the DGE forward/backward mismatch -- plus worst-site aggregates
-(`agg/min_snr_db`, `agg/max_clamp_frac`, ...). Each training step appends
-one JSON object to the log; read it back with `repro.obs.read_jsonl` or
-any `jq`-style tool. The flag also arms the activation-collapse sentinel:
-if clamp fraction / SNR trends breach the thresholds for `patience`
-consecutive steps, the trainer checkpoints and flips to a bf16-policy
-step function (events `collapse_trip` / `bf16_fallback` in the history).
-Telemetry needs the unrolled execution mode, so `--obs-log` forces
-`scan_layers=False` (fine at example scale; see DESIGN.md §11).
 """
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.policy import get_policy
-from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.data import (DataConfig, DevicePrefetcher, PackedStream,
+                        ShardReader, SyntheticLM, SyntheticStream,
+                        write_synthetic_shards)
 from repro.models import build_model
 from repro.obs import SentinelConfig
 from repro.optim import adam as adam_mod
@@ -42,8 +73,38 @@ from repro.train import train_step as ts_mod
 from repro.train.trainer import Trainer, TrainerConfig
 
 
+def build_loader(args, vocab_size: int):
+    """Data path selection: shard corpus (--data) vs synthetic fallback."""
+    if args.data:
+        manifest = args.data if args.data.endswith(".json") else \
+            os.path.join(args.data, "manifest.json")
+        if not os.path.exists(manifest) and args.make_data:
+            print(f"materializing {args.make_data} synthetic docs "
+                  f"into {args.data}")
+            write_synthetic_shards(
+                args.data, DataConfig(vocab_size, args.seq, args.batch),
+                args.make_data)
+        reader = ShardReader(manifest)
+        stream = PackedStream(reader, seq_len=args.seq,
+                              batch_size=args.batch, seed=0)
+        src = (f"shards ({reader.total_docs} docs, "
+               f"{reader.total_tokens/1e6:.1f}M tokens)")
+    else:
+        stream = SyntheticStream(
+            SyntheticLM(DataConfig(vocab_size, args.seq, args.batch)))
+        src = "synthetic"
+    if args.prefetch > 0:
+        place = lambda arrays: {k: jnp.asarray(v)
+                                for k, v in arrays.items()}
+        return DevicePrefetcher(stream, place_fn=place,
+                                depth=args.prefetch), src + " +prefetch"
+    return stream, src
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n")[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--policy", default="fp4")
     ap.add_argument("--ckpt", default="/tmp/fp4_ckpt")
@@ -51,6 +112,13 @@ def main():
     ap.add_argument("--layers", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--data", default=None, metavar="PATH",
+                    help="shard corpus dir or manifest.json "
+                         "(docs/data_format.md); omit for synthetic data")
+    ap.add_argument("--make-data", type=int, default=0, metavar="N",
+                    help="generate N synthetic docs into --data if empty")
+    ap.add_argument("--prefetch", type=int, default=2, metavar="K",
+                    help="async device prefetch depth (0 = blocking fetch)")
     ap.add_argument("--obs-log", default=None, metavar="PATH",
                     help="write per-step quant-health JSONL here and arm "
                          "the collapse sentinel (DESIGN.md §11)")
@@ -71,8 +139,9 @@ def main():
 
     params, _ = model.init(jax.random.PRNGKey(0))
     n_params = sum(p.size for p in jax.tree.leaves(params))
+    loader, src = build_loader(args, cfg.vocab_size)
     print(f"model: {n_params/1e6:.1f}M params, policy={args.policy}"
-          f"{' +obs' if obs_on else ''}")
+          f"{' +obs' if obs_on else ''}, data={src}")
 
     adam_cfg = adam_mod.AdamConfig()
     state = {"params": params, "opt": adam_mod.init_state(params, adam_cfg),
@@ -89,18 +158,28 @@ def main():
             fb_model, None, adam_cfg=adam_cfg, total_steps=args.steps,
             peak_lr=3e-4), donate_argnums=0)
 
-    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
     trainer = Trainer(
-        step_fn, state,
-        batch_fn=lambda s: {"tokens": jnp.asarray(data.global_batch(s))},
+        step_fn, state, loader=loader,
         cfg=TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
                           ckpt_every=100, log_every=20,
                           obs_jsonl=args.obs_log,
                           sentinel=SentinelConfig() if obs_on else None),
         fallback_step_fn=fallback_fn)
-    history = trainer.run()
+    try:
+        history = trainer.run()
+    finally:
+        if hasattr(loader, "stop"):
+            loader.stop()
     losses = [h["loss"] for h in history if "loss" in h]
-    print(f"steps run: {len(losses)}; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if losses:
+        print(f"steps run: {len(losses)}; "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    else:
+        print("steps run: 0 (checkpoint already at --steps; nothing to do)")
+    if trainer._last_data_stats:
+        d = trainer._last_data_stats
+        print(f"input pipeline: stall={d['stall_ms']:.2f}ms/step "
+              f"depth={d['queue_depth']:.1f} pack={d['pack_frac']:.3f}")
     if trainer.watchdog.flagged:
         print(f"straggler steps flagged: {trainer.watchdog.flagged[:5]}")
     if obs_on:

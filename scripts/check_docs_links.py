@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Internal-link checker for the repo's markdown docs (stdlib-only).
+
+Validates every relative markdown link in README.md, DESIGN.md and
+docs/**.md:
+
+  * the target file exists (relative to the linking file)
+  * a `#fragment` resolves to a heading in the target, using GitHub's
+    slug rules (lowercase, punctuation stripped, spaces -> dashes)
+
+External links (http/https/mailto) are ignored -- CI must not depend on
+network reachability. Exit 0 = clean, 1 = broken links listed.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor algorithm: strip formatting/punctuation, dash spaces."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)          # drop punctuation (unicode-aware)
+    return h.replace(" ", "-")
+
+
+def doc_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md", ROOT / "DESIGN.md"]
+    files += sorted((ROOT / "docs").rglob("*.md")) \
+        if (ROOT / "docs").is_dir() else []
+    return [f for f in files if f.exists()]
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    return {github_slug(m.group(1))
+            for m in HEADING_RE.finditer(path.read_text())}
+
+
+def main() -> int:
+    errs = []
+    for src in doc_files():
+        text = src.read_text()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = src if not path_part else \
+                (src.parent / path_part).resolve()
+            line = text[:m.start()].count("\n") + 1
+            if not dest.exists():
+                errs.append(f"{src.relative_to(ROOT)}:{line}: broken link "
+                            f"-> {target} (no such file)")
+                continue
+            if frag and dest.suffix == ".md" and \
+                    frag not in anchors_of(dest):
+                errs.append(f"{src.relative_to(ROOT)}:{line}: broken "
+                            f"anchor -> {target}")
+    for e in errs:
+        print(e)
+    print(f"{len(doc_files())} files checked, {len(errs)} broken links")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

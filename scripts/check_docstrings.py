@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docstring lint for the public `repro.core` API (stdlib-only fallback).
+
+CI runs `ruff check --select D` (pydocstyle rules, configured in
+pyproject.toml) when ruff is installed; this script enforces the same
+missing-docstring subset (D100/D101/D102/D103) with nothing but the
+stdlib, so bare environments (and the pre-commit habit of running
+`python scripts/check_docstrings.py`) get the same gate.
+
+Checked, per module under src/repro/core:
+  * module docstring present (D100)
+  * every public class has a docstring (D101)
+  * every public function/method has a docstring (D102/D103),
+    ignoring names with a leading underscore and dunder methods
+    other than __init__ (property setters/overloads included)
+
+Exit code 0 = clean; 1 = violations (listed one per line as
+path:line: code name).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+DEFAULT_SCOPE = "src/repro/core"
+
+
+def _public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _check_module(path: pathlib.Path) -> list[str]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    errs = []
+    if ast.get_docstring(tree) is None:
+        errs.append(f"{path}:1: D100 missing module docstring")
+
+    def walk(node, in_class: bool):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                if _public(child.name) and \
+                        ast.get_docstring(child) is None:
+                    errs.append(f"{path}:{child.lineno}: D101 missing "
+                                f"docstring in class {child.name}")
+                walk(child, in_class=True)
+            elif isinstance(child, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                if _public(child.name) and \
+                        ast.get_docstring(child) is None:
+                    code = "D102" if in_class else "D103"
+                    errs.append(f"{path}:{child.lineno}: {code} missing "
+                                f"docstring in {child.name}")
+                # nested defs are implementation detail: skip
+    walk(tree, in_class=False)
+    return errs
+
+
+def main(argv: list[str]) -> int:
+    scope = pathlib.Path(argv[1] if len(argv) > 1 else DEFAULT_SCOPE)
+    files = sorted(scope.rglob("*.py"))
+    if not files:
+        print(f"no python files under {scope}", file=sys.stderr)
+        return 2
+    errs = []
+    for f in files:
+        errs.extend(_check_module(f))
+    for e in errs:
+        print(e)
+    print(f"{len(files)} files checked, {len(errs)} violations")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

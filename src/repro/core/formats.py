@@ -30,6 +30,7 @@ class FP4Format:
 
     @property
     def max_value(self) -> float:
+        """Largest representable magnitude (MAX_fmt in the paper's Eq. 2)."""
         return self.positive_values[-1]
 
     @property
@@ -75,6 +76,7 @@ def grid(fmt: FP4Format | str):
 
 
 def get_format(fmt: FP4Format | str) -> FP4Format:
+    """Resolve a format name ("e2m1"/"e1m2"/"e3m0") or pass one through."""
     return fmt if isinstance(fmt, FP4Format) else FORMATS[fmt]
 
 
@@ -114,6 +116,7 @@ def to_int8_codes(x_on_grid: jnp.ndarray) -> jnp.ndarray:
 
 
 def from_int8_codes(codes: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of `to_int8_codes`: exact int8 codes back to grid values."""
     return codes.astype(dtype) / E2M1_INT8_SCALE
 
 
@@ -124,12 +127,14 @@ def from_int8_codes(codes: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def values_to_indices(x_on_grid: jnp.ndarray, fmt: FP4Format | str = E2M1) -> jnp.ndarray:
+    """On-grid values -> 4-bit grid indices in [0, 15) (storage codes)."""
     values, bounds = grid(fmt)
     return jnp.searchsorted(bounds, x_on_grid, side="right").astype(jnp.uint8)
 
 
 def indices_to_values(idx: jnp.ndarray, fmt: FP4Format | str = E2M1,
                       dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of `values_to_indices`: grid indices back to float values."""
     values, _ = grid(fmt)
     return values.astype(dtype)[idx]
 
@@ -144,6 +149,7 @@ def pack_e2m1(idx: jnp.ndarray) -> jnp.ndarray:
 
 
 def unpack_e2m1(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of `pack_e2m1`: uint8 pairs back to 4-bit index arrays."""
     lo = packed & 0x0F
     hi = (packed >> 4) & 0x0F
     out = jnp.stack([lo, hi], axis=-1)

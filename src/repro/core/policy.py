@@ -21,6 +21,17 @@ _DTYPES = {
 
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
+    """Every knob of the FP4 training recipe in one frozen dataclass.
+
+    Field groups mirror the paper: weight quantization via DGE (Eq. 22's
+    soft-step derivative with strength k and clip delta), activation
+    quantization with OCC (quantile alpha clamp + residual compensation,
+    §3.2), scale granularity (Eq. 2's absmax scaling, per-channel /
+    per-token / tensor-wise), and the GeMM execution backend. Hashable so
+    jitted functions close over it as a static argument; presets in
+    `PRESETS` reproduce the paper's experimental arms.
+    """
+
     enabled: bool = True
     fmt: str = "e2m1"
 
@@ -58,9 +69,11 @@ class QuantPolicy:
 
     @property
     def compute_dtype(self):
+        """The jnp dtype of non-GeMM compute (norms, softmax, residual)."""
         return _DTYPES[self.compute]
 
     def replace(self, **kw) -> "QuantPolicy":
+        """A copy with the given fields replaced (dataclasses.replace)."""
         return dataclasses.replace(self, **kw)
 
     def fallback(self) -> "QuantPolicy":
@@ -105,6 +118,7 @@ PRESETS: dict[str, QuantPolicy] = {
 
 
 def get_policy(name: str) -> QuantPolicy:
+    """Look up a preset policy by name (see `PRESETS`; KeyError if unknown)."""
     if name not in PRESETS:
         raise KeyError(f"unknown policy {name!r}; have {sorted(PRESETS)}")
     return PRESETS[name]

@@ -63,6 +63,7 @@ def quantize(x: jnp.ndarray, axis: int | Sequence[int] | None = None,
 
 
 def dequantize(x_q: jnp.ndarray, scale: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    """Undo Eq. (1)'s scaling: x ~= x_q_scaled / gamma (broadcast over axis)."""
     out = x_q.astype(jnp.float32) / scale
     return out.astype(dtype) if dtype is not None else out
 
@@ -89,4 +90,5 @@ def quantize_fp8(x: jnp.ndarray, e4m3: bool = True):
 
 
 def dequantize_fp8(x8: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    """Inverse of `quantize_fp8`: fp8 storage + scale back to `dtype`."""
     return (x8.astype(jnp.float32) / scale).astype(dtype)

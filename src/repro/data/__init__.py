@@ -1,0 +1,30 @@
+"""repro.data -- input pipeline (v2: streaming shards, DESIGN.md §14).
+
+Two data paths feed the trainer:
+
+  * synthetic  -- `SyntheticLM` / `SyntheticStream`: deterministic
+    Zipf+Markov token process, no files on disk (CI, unit tests, quick
+    smoke trains).
+  * shards     -- `ShardWriter`/`ShardReader` (memory-mapped token
+    shards + JSON manifest), `PackedStream` (checkpointable best-fit
+    packing with segment-ID masks), `DevicePrefetcher` (async
+    host->device double buffering).
+
+Both stream flavors expose next_batch()/state_dict()/load_state_dict(),
+so `train/trainer.py` checkpoints and resumes either one bit-exactly.
+See docs/data_format.md for the on-disk layout and resume guarantees.
+"""
+from .packing import PackedBatch, assemble, best_fit, split_spans
+from .prefetch import DevicePrefetcher
+from .shards import ShardReader, ShardWriter, token_dtype
+from .stream import PackedStream, SyntheticStream
+from .synthetic import (DataConfig, SyntheticLM, make_batch_fn,
+                        synthetic_documents, write_synthetic_shards)
+
+__all__ = [
+    "PackedBatch", "assemble", "best_fit", "split_spans",
+    "DevicePrefetcher", "ShardReader", "ShardWriter", "token_dtype",
+    "PackedStream", "SyntheticStream",
+    "DataConfig", "SyntheticLM", "make_batch_fn",
+    "synthetic_documents", "write_synthetic_shards",
+]

@@ -1,0 +1,93 @@
+"""Best-fit sequence packing with segment-ID masks.
+
+Documents rarely match the training sequence length, so rows of a packed
+batch concatenate several document *fragments* back to back. Attention
+between fragments is forbidden via per-token segment ids (threaded into
+`models/attention.py` masks), positions restart at 0 inside each fragment
+(RoPE sees every fragment as its own sequence), and the loss mask zeroes the
+cross-fragment next-token predictions.
+
+Conventions (docs/data_format.md "Packing semantics"):
+  * ``segment_ids``: int32, 1-based per-row fragment index; 0 = padding.
+  * ``positions``:   int32, 0-based within fragment; -1 on padding (the
+    attention mask already treats negative key positions as invalid).
+  * ``loss_mask``:   float32; label at position j counts iff j and j-1
+    belong to the same non-pad segment (no cross-fragment prediction,
+    no prediction of padding).
+
+The placement policy is deterministic **best-fit with bounded
+lookahead**: among the first `lookahead` pending fragments, place the
+(fragment, row) pair with the tightest fit (smallest leftover space);
+ties resolve to the earliest pending fragment, then the lowest row. The
+batch closes when nothing in the window fits any row. Determinism is
+what makes the stream checkpointable (data/stream.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def split_spans(length: int, seq_len: int) -> list[tuple[int, int]]:
+    """Split a document of `length` tokens into (start, end) spans <= seq_len."""
+    return [(s, min(s + seq_len, length))
+            for s in range(0, length, seq_len)]
+
+
+def best_fit(frag_lens: list[int], free: list[int]) -> tuple[int, int] | None:
+    """Pick (fragment index, row index) with the tightest fit.
+
+    `frag_lens` are the lengths of the lookahead window (pending order);
+    `free` the remaining space per row. Returns None when nothing fits.
+    """
+    best: tuple[int, int, int] | None = None      # (leftover, wi, row)
+    for wi, ln in enumerate(frag_lens):
+        for r, fr in enumerate(free):
+            if fr >= ln:
+                key = (fr - ln, wi, r)
+                if best is None or key < best:
+                    best = key
+    if best is None:
+        return None
+    return best[1], best[2]
+
+
+@dataclasses.dataclass
+class PackedBatch:
+    """One packed batch: jit-ready arrays plus host-side packing stats."""
+
+    arrays: dict            # tokens/segment_ids/positions/loss_mask (B,S)
+    meta: dict              # pack_frac, n_fragments, n_pad_tokens
+
+
+def assemble(rows: list[list[np.ndarray]], seq_len: int) -> PackedBatch:
+    """Concatenate each row's fragments into fixed (B, S) arrays.
+
+    Rows shorter than `seq_len` are right-padded with token 0,
+    segment 0, position -1, loss_mask 0.
+    """
+    B, S = len(rows), seq_len
+    tokens = np.zeros((B, S), np.int32)
+    segs = np.zeros((B, S), np.int32)
+    pos = np.full((B, S), -1, np.int32)
+    n_frags = 0
+    for r, frags in enumerate(rows):
+        at = 0
+        for si, frag in enumerate(frags):
+            ln = len(frag)
+            tokens[r, at:at + ln] = frag
+            segs[r, at:at + ln] = si + 1
+            pos[r, at:at + ln] = np.arange(ln, dtype=np.int32)
+            at += ln
+            n_frags += 1
+    # label at j is valid iff j-1 and j share a non-pad segment
+    same = np.zeros((B, S), bool)
+    same[:, 1:] = (segs[:, 1:] == segs[:, :-1]) & (segs[:, 1:] > 0)
+    loss_mask = same.astype(np.float32)
+    n_real = int((segs > 0).sum())
+    return PackedBatch(
+        arrays={"tokens": tokens, "segment_ids": segs, "positions": pos,
+                "loss_mask": loss_mask},
+        meta={"pack_frac": n_real / float(B * S), "n_fragments": n_frags,
+              "n_pad_tokens": B * S - n_real})

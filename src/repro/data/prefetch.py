@@ -1,0 +1,153 @@
+"""Double-buffered host->device prefetch for checkpointable streams.
+
+A background producer thread runs the host-side pipeline (shard reads +
+packing -- all numpy, GIL-friendly) into a bounded queue; the consumer
+side stages batches onto the device with a sharding-aware `place_fn`
+(typically `jax.device_put` with `dist/sharding.py` batch shardings) so
+the next batch's H2D transfer is in flight while the current step runs.
+
+Checkpoint correctness with a read-ahead producer: every queue item
+carries the stream state snapshot taken *after* that batch was drawn.
+`state_dict()` returns the snapshot of the most recently *consumed*
+batch -- never the producer's (further ahead) live state -- so a resume
+replays exactly the batches the trainer did not see. `restart(state)`
+flushes the queue and reseeks the underlying stream (used by the
+trainer's failure-recovery path).
+
+Health counters (`stats()`, reset per call) feed `repro.obs` records:
+stall_ms (consumer time blocked waiting on the queue), queue_depth
+(occupancy when the consumer arrived), pack_frac (mean packing
+efficiency of the consumed batches).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+from .packing import PackedBatch
+
+
+class DevicePrefetcher:
+    """Wrap a checkpointable stream with an async producer + device staging.
+
+    `stream` must expose next_batch()/state_dict()/load_state_dict()
+    (PackedStream, SyntheticStream). `place_fn(arrays) -> arrays` stages a
+    host batch onto devices; identity by default.
+    """
+
+    def __init__(self, stream, place_fn=None, depth: int = 2):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.stream = stream
+        self.place_fn = place_fn or (lambda arrays: arrays)
+        self.depth = depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._consumed_state = stream.state_dict()
+        self._staged: PackedBatch | None = None
+        self._staged_state: dict | None = None
+        self._error: BaseException | None = None
+        # rolling health counters, drained by stats()
+        self._stall_ms = 0.0
+        self._depth_sum = 0
+        self._pack_sum = 0.0
+        self._n_batches = 0
+        self._start()
+
+    # ---------------------------------------------------------- producer
+    def _start(self):
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self):
+        try:
+            while not self._stop.is_set():
+                batch = self.stream.next_batch()
+                state = self.stream.state_dict()
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((batch, state), timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # noqa: BLE001 - surfaced to consumer
+            self._error = e
+            self._stop.set()
+
+    def _pop(self, block: bool) -> tuple[PackedBatch, dict] | None:
+        if self._error is not None:
+            raise RuntimeError("prefetch producer died") from self._error
+        try:
+            return self._q.get(timeout=60.0) if block else \
+                self._q.get_nowait()
+        except queue.Empty:
+            if self._error is not None:
+                raise RuntimeError("prefetch producer died") from self._error
+            if block:
+                raise TimeoutError("prefetch producer stalled > 60s")
+            return None
+
+    # ---------------------------------------------------------- consumer
+    def next_batch(self) -> PackedBatch:
+        """Next batch with arrays already staged via `place_fn`."""
+        t0 = time.perf_counter()
+        self._depth_sum += self._q.qsize() + (self._staged is not None)
+        if self._staged is not None:
+            batch, state = self._staged, self._staged_state
+            self._staged = None
+        else:
+            batch, state = self._pop(block=True)
+            batch = PackedBatch(self.place_fn(batch.arrays), batch.meta)
+        self._stall_ms += (time.perf_counter() - t0) * 1e3
+        self._consumed_state = state
+        self._pack_sum += batch.meta.get("pack_frac", 1.0)
+        self._n_batches += 1
+        # double buffering: stage the following batch on-device now, so
+        # its H2D transfer overlaps the step that consumes `batch`
+        nxt = self._pop(block=False)
+        if nxt is not None:
+            nb, ns = nxt
+            self._staged = PackedBatch(self.place_fn(nb.arrays), nb.meta)
+            self._staged_state = ns
+        return batch
+
+    def state_dict(self) -> dict:
+        """Stream state as of the last *consumed* batch (checkpoint-safe)."""
+        return self._consumed_state
+
+    def load_state_dict(self, state: dict) -> None:
+        """Alias for `restart` (same surface as the raw streams)."""
+        self.restart(state)
+
+    def restart(self, state: dict) -> None:
+        """Flush read-ahead and reseek the stream to `state`."""
+        self.stop()
+        self.stream.load_state_dict(state)
+        self._consumed_state = self.stream.state_dict()
+        self._staged = None
+        self._staged_state = None
+        self._error = None
+        self._q = queue.Queue(maxsize=self.depth)
+        self._start()
+
+    def stats(self) -> dict:
+        """Drain health counters accumulated since the previous call."""
+        n = max(1, self._n_batches)
+        out = {"stall_ms": self._stall_ms / n,
+               "queue_depth": self._depth_sum / n,
+               "pack_frac": self._pack_sum / n}
+        self._stall_ms = 0.0
+        self._depth_sum = 0
+        self._pack_sum = 0.0
+        self._n_batches = 0
+        return out
+
+    def stop(self) -> None:
+        """Stop the producer thread (idempotent)."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None

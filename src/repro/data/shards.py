@@ -1,0 +1,177 @@
+"""Tokenized shard format: memory-mappable fixed-dtype records + manifest.
+
+On-disk layout (documented in docs/data_format.md; DESIGN.md §14):
+
+    <root>/manifest.json         format version, token dtype, vocab size,
+                                 per-shard doc/token counts
+    <root>/shard_00000.bin       raw little-endian token ids, documents
+                                 concatenated back to back
+    <root>/shard_00000.idx       raw int64 document offsets, n_docs+1
+                                 entries (offsets[i]..offsets[i+1] is doc i)
+
+Both the ``.bin`` and ``.idx`` files are flat arrays with no header, so a
+reader memory-maps them (`np.memmap`) and never materializes a shard in
+RAM. Token dtype is ``uint16`` when ``vocab_size <= 65536`` else
+``uint32``; document boundaries come only from the index file.
+
+Writers are atomic at the manifest level: shards are written first and
+``manifest.json`` last, so a directory with a manifest is always complete.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+FORMAT_NAME = "repro-shards-v1"
+_IDX_DTYPE = np.int64
+
+
+def token_dtype(vocab_size: int) -> np.dtype:
+    """Smallest fixed-width unsigned dtype that holds `vocab_size` ids."""
+    return np.dtype(np.uint16 if vocab_size <= 1 << 16 else np.uint32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    """One shard's manifest entry (file names + record counts)."""
+
+    file: str
+    idx: str
+    n_docs: int
+    n_tokens: int
+
+
+class ShardWriter:
+    """Streaming shard writer: feed documents, get a manifest.
+
+    Documents accumulate into the current shard until `shard_tokens` is
+    reached, then the shard rolls over. `finalize()` writes the manifest
+    (the commit point) and returns its path.
+    """
+
+    def __init__(self, root: str, vocab_size: int,
+                 shard_tokens: int = 1 << 24):
+        self.root = root
+        self.vocab_size = vocab_size
+        self.shard_tokens = shard_tokens
+        self.dtype = token_dtype(vocab_size)
+        self.shards: list[ShardInfo] = []
+        os.makedirs(root, exist_ok=True)
+        self._bin = None
+        self._offsets: list[int] = []
+        self._cur_tokens = 0
+
+    def _open_shard(self):
+        i = len(self.shards)
+        self._bin_name = f"shard_{i:05d}.bin"
+        self._idx_name = f"shard_{i:05d}.idx"
+        self._bin = open(os.path.join(self.root, self._bin_name), "wb")
+        self._offsets = [0]
+        self._cur_tokens = 0
+
+    def _close_shard(self):
+        if self._bin is None:
+            return
+        self._bin.close()
+        np.asarray(self._offsets, _IDX_DTYPE).tofile(
+            os.path.join(self.root, self._idx_name))
+        self.shards.append(ShardInfo(self._bin_name, self._idx_name,
+                                     len(self._offsets) - 1,
+                                     self._cur_tokens))
+        self._bin = None
+
+    def add_document(self, tokens: np.ndarray) -> None:
+        """Append one document (1-D array of token ids) to the corpus."""
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 1 or tokens.size == 0:
+            raise ValueError(f"document must be 1-D non-empty, "
+                             f"got shape {tokens.shape}")
+        if tokens.max() >= self.vocab_size or tokens.min() < 0:
+            raise ValueError("token id out of range for vocab_size="
+                             f"{self.vocab_size}")
+        if self._bin is None:
+            self._open_shard()
+        self._bin.write(tokens.astype(self.dtype).tobytes())
+        self._cur_tokens += tokens.size
+        self._offsets.append(self._cur_tokens)
+        if self._cur_tokens >= self.shard_tokens:
+            self._close_shard()
+
+    def finalize(self, meta: dict | None = None) -> str:
+        """Close the open shard and write `manifest.json` (commit point)."""
+        self._close_shard()
+        manifest = {
+            "format": FORMAT_NAME,
+            "dtype": self.dtype.name,
+            "vocab_size": self.vocab_size,
+            "total_docs": sum(s.n_docs for s in self.shards),
+            "total_tokens": sum(s.n_tokens for s in self.shards),
+            "shards": [dataclasses.asdict(s) for s in self.shards],
+            "meta": meta or {},
+        }
+        path = os.path.join(self.root, "manifest.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(tmp, path)
+        return path
+
+
+class ShardReader:
+    """Memory-mapped random access to a shard directory.
+
+    Documents are addressed by a *global* doc id in [0, total_docs);
+    `doc(gid)` returns a zero-copy memmap slice. Per-shard maps are opened
+    lazily and kept, so sequential scans touch each file once.
+    """
+
+    def __init__(self, manifest_path: str):
+        if os.path.isdir(manifest_path):
+            manifest_path = os.path.join(manifest_path, "manifest.json")
+        with open(manifest_path) as f:
+            self.manifest = json.load(f)
+        if self.manifest.get("format") != FORMAT_NAME:
+            raise ValueError(
+                f"unsupported shard format {self.manifest.get('format')!r}"
+                f" (expected {FORMAT_NAME})")
+        self.root = os.path.dirname(os.path.abspath(manifest_path))
+        self.dtype = np.dtype(self.manifest["dtype"])
+        self.vocab_size = int(self.manifest["vocab_size"])
+        self.shards = self.manifest["shards"]
+        counts = [s["n_docs"] for s in self.shards]
+        self._doc_base = np.concatenate([[0], np.cumsum(counts)])
+        self.total_docs = int(self._doc_base[-1])
+        self.total_tokens = int(self.manifest["total_tokens"])
+        self._maps: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    def _shard_maps(self, si: int):
+        if si not in self._maps:
+            s = self.shards[si]
+            toks = np.memmap(os.path.join(self.root, s["file"]),
+                             dtype=self.dtype, mode="r")
+            idx = np.memmap(os.path.join(self.root, s["idx"]),
+                            dtype=_IDX_DTYPE, mode="r")
+            self._maps[si] = (toks, idx)
+        return self._maps[si]
+
+    def locate(self, gid: int) -> tuple[int, int]:
+        """Global doc id -> (shard index, local doc index)."""
+        if not 0 <= gid < self.total_docs:
+            raise IndexError(gid)
+        si = int(np.searchsorted(self._doc_base, gid, side="right") - 1)
+        return si, gid - int(self._doc_base[si])
+
+    def doc(self, gid: int) -> np.ndarray:
+        """Tokens of global document `gid` (zero-copy memmap view)."""
+        si, li = self.locate(gid)
+        toks, idx = self._shard_maps(si)
+        return toks[int(idx[li]):int(idx[li + 1])]
+
+    def doc_len(self, gid: int) -> int:
+        """Length of global document `gid` without touching its tokens."""
+        si, li = self.locate(gid)
+        _, idx = self._shard_maps(si)
+        return int(idx[li + 1] - idx[li])

@@ -1,0 +1,148 @@
+"""Deterministic, checkpointable packed-batch stream over shard corpora.
+
+`PackedStream` is the training-side iterator: it walks the corpus in a
+seeded per-epoch document permutation, splits documents into <=seq_len
+fragments, packs them with the best-fit policy (data/packing.py), and
+emits fixed-shape batches forever (epochs wrap automatically).
+
+Resume contract (docs/data_format.md "Resume guarantees"): the full
+iterator state is four JSON-serializable fields --
+
+    epoch    which permutation is active (perm = PRNG([seed, epoch]))
+    cursor   next index into the epoch's document order
+    pending  fragments fetched but not yet packed: [gid, start, end]
+    seed     the stream's own seed (sanity-checked on load)
+
+`state_dict()` snapshots the state *before* the next `next_batch()`
+call, so save(state) -> load(state) -> next_batch() reproduces exactly
+the batch an uninterrupted stream would have produced: resume is
+bit-exact. The trainer serializes this blob into the checkpoint
+manifest (`train/checkpoint.py` `extra["data"]`).
+"""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from . import packing
+from .shards import ShardReader
+
+STATE_VERSION = 1
+
+
+class PackedStream:
+    """Checkpointable best-fit packed batch iterator over a ShardReader."""
+
+    def __init__(self, reader: ShardReader, *, seq_len: int, batch_size: int,
+                 seed: int = 0, lookahead: int = 8):
+        if reader.total_docs == 0:
+            raise ValueError("empty corpus")
+        self.reader = reader
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.seed = seed
+        self.lookahead = max(1, lookahead)
+        self._epoch = 0
+        self._cursor = 0
+        self._pending: list[list[int]] = []     # [gid, start, end]
+        self._perm_epoch: int | None = None
+        self._perm: np.ndarray | None = None
+
+    # ------------------------------------------------------------- state
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot; `next_batch()` after a
+        `load_state_dict(state_dict())` round-trip is bit-exact."""
+        return {"version": STATE_VERSION, "seed": self.seed,
+                "epoch": self._epoch, "cursor": self._cursor,
+                "pending": copy.deepcopy(self._pending)}
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a `state_dict()` snapshot (checkpoint resume)."""
+        if state.get("version") != STATE_VERSION:
+            raise ValueError(f"unsupported stream state version "
+                             f"{state.get('version')!r}")
+        if state.get("seed") != self.seed:
+            raise ValueError(
+                f"stream seed mismatch: checkpoint has {state.get('seed')}, "
+                f"stream configured with {self.seed}")
+        self._epoch = int(state["epoch"])
+        self._cursor = int(state["cursor"])
+        self._pending = [list(map(int, p)) for p in state["pending"]]
+        self._perm_epoch = None     # recompute lazily
+
+    # ------------------------------------------------------------ fetch
+    def _epoch_perm(self) -> np.ndarray:
+        if self._perm_epoch != self._epoch:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, self._epoch]))
+            self._perm = rng.permutation(self.reader.total_docs)
+            self._perm_epoch = self._epoch
+        return self._perm
+
+    def _fetch_doc(self) -> None:
+        """Pull the next document of the epoch order into `pending`."""
+        perm = self._epoch_perm()
+        gid = int(perm[self._cursor])
+        self._cursor += 1
+        if self._cursor >= self.reader.total_docs:
+            self._epoch += 1
+            self._cursor = 0
+        for s, e in packing.split_spans(self.reader.doc_len(gid),
+                                        self.seq_len):
+            self._pending.append([gid, s, e])
+
+    def _fill_pending(self) -> None:
+        while len(self._pending) < self.lookahead:
+            self._fetch_doc()
+
+    # ------------------------------------------------------------- emit
+    def next_batch(self) -> packing.PackedBatch:
+        """Pack and return the next (batch_size, seq_len) batch."""
+        free = [self.seq_len] * self.batch_size
+        rows: list[list[np.ndarray]] = [[] for _ in range(self.batch_size)]
+        while True:
+            self._fill_pending()
+            window = self._pending[:self.lookahead]
+            pick = packing.best_fit([e - s for _, s, e in window], free)
+            if pick is None:
+                break
+            wi, row = pick
+            gid, s, e = self._pending.pop(wi)
+            toks = np.asarray(self.reader.doc(gid)[s:e], np.int32)
+            rows[row].append(toks)
+            free[row] -= e - s
+        return packing.assemble(rows, self.seq_len)
+
+
+class SyntheticStream:
+    """Checkpointable adapter over the step-indexed `SyntheticLM`.
+
+    Gives the synthetic fallback the same (next_batch / state_dict /
+    load_state_dict) surface as `PackedStream`, so the trainer and the
+    prefetcher treat both identically. Batches carry only "tokens" --
+    byte-identical to the legacy step-indexed `batch_fn(step)` path
+    (contiguous full-length rows need no segment masks).
+    """
+
+    def __init__(self, dataset):
+        self.dataset = dataset
+        self._step = 0
+
+    def state_dict(self) -> dict:
+        """Snapshot = the next step index (the stream is stateless)."""
+        return {"version": STATE_VERSION, "seed": self.dataset.cfg.seed,
+                "step": self._step}
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore the step cursor saved by `state_dict()`."""
+        self._step = int(state["step"])
+
+    def next_batch(self) -> packing.PackedBatch:
+        """One synthetic (B, S) batch as a trivially-packed PackedBatch."""
+        toks = self.dataset.global_batch(self._step)
+        self._step += 1
+        B, S = toks.shape
+        return packing.PackedBatch(
+            arrays={"tokens": toks.astype(np.int32)},
+            meta={"pack_frac": 1.0, "n_fragments": B, "n_pad_tokens": 0})

@@ -72,3 +72,56 @@ class SyntheticLM:
 def make_batch_fn(cfg: DataConfig):
     ds = SyntheticLM(cfg)
     return ds.global_batch
+
+
+# --------------------------------------------------------------------------
+# Document-shaped synthetic corpus -> on-disk shards (repro.data v2).
+# Reuses the same Zipf+Markov process but emits variable-length documents,
+# so the packing / shard pipeline has realistic length statistics to chew
+# on (log-normal doc lengths, like web corpora).
+# --------------------------------------------------------------------------
+
+def synthetic_documents(cfg: DataConfig, n_docs: int, *,
+                        mean_len: float = 200.0, sigma: float = 0.8,
+                        min_len: int = 8, max_len: int | None = None):
+    """Yield `n_docs` variable-length token documents (deterministic).
+
+    Lengths are log-normal around `mean_len`; content comes from the same
+    unigram/Markov process as `SyntheticLM` so losses stay meaningfully
+    reducible. Document i depends only on (cfg.seed, i) -- regeneration
+    is reproducible and order-independent.
+    """
+    ds = SyntheticLM(cfg)
+    len_rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, 0xD0C5]))
+    lens = np.exp(len_rng.normal(np.log(mean_len), sigma, size=n_docs))
+    lens = np.clip(lens.astype(np.int64), min_len, max_len or 1 << 20)
+    V = cfg.vocab_size
+    for i in range(n_docs):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, 0xD0C, i]))
+        L = int(lens[i])
+        toks = np.empty(L, np.int64)
+        toks[0] = rng.choice(V, p=ds._unigram)
+        fresh = rng.choice(V, size=L, p=ds._unigram)
+        use_markov = rng.random(L) < 0.75
+        for t in range(1, L):
+            prev = toks[t - 1]
+            nxt = (prev + ds._state_shift[ds._tok_state[prev]]) % V
+            toks[t] = nxt if use_markov[t] else fresh[t]
+        yield toks.astype(np.int32)
+
+
+def write_synthetic_shards(root: str, cfg: DataConfig, n_docs: int, *,
+                           shard_tokens: int = 1 << 18, **doc_kw) -> str:
+    """Materialize a synthetic corpus as a v1 shard directory.
+
+    Returns the manifest path (`data/shards.py` layout). Used by the
+    example driver's `--make-data`, the data benchmark, and tests.
+    """
+    from .shards import ShardWriter
+    w = ShardWriter(root, cfg.vocab_size, shard_tokens=shard_tokens)
+    for doc in synthetic_documents(cfg, n_docs, **doc_kw):
+        w.add_document(doc)
+    return w.finalize(meta={"source": "synthetic", "seed": cfg.seed,
+                            "n_docs": n_docs})

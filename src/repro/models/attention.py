@@ -18,25 +18,37 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def _mask_ok(q_pos, kv_pos, causal: bool, window: int | None):
-    """Boolean keep-mask from absolute positions. Shapes: (Sq,Skv) when both
-    positions are 1D, else (B,Sq,Skv). kv slots with position < 0 are
-    invalid (empty cache slots)."""
-    if q_pos.ndim == 1 and kv_pos.ndim == 1:
-        qp = q_pos[:, None].astype(jnp.int32)
-        kp = kv_pos[None, :].astype(jnp.int32)
-    else:
-        if q_pos.ndim == 1:
-            q_pos = q_pos[None]
-        if kv_pos.ndim == 1:
-            kv_pos = kv_pos[None]
-        qp = q_pos[:, :, None].astype(jnp.int32)
-        kp = kv_pos[:, None, :].astype(jnp.int32)
+def _pair_grid(q_vec, kv_vec):
+    """Broadcast per-token (q, kv) vectors to a pair grid: (Sq,Skv) when
+    both are 1D (batch-uniform), else (B,Sq,Skv)."""
+    if q_vec.ndim == 1 and kv_vec.ndim == 1:
+        return (q_vec[:, None].astype(jnp.int32),
+                kv_vec[None, :].astype(jnp.int32))
+    if q_vec.ndim == 1:
+        q_vec = q_vec[None]
+    if kv_vec.ndim == 1:
+        kv_vec = kv_vec[None]
+    return (q_vec[:, :, None].astype(jnp.int32),
+            kv_vec[:, None, :].astype(jnp.int32))
+
+
+def _mask_ok(q_pos, kv_pos, causal: bool, window: int | None,
+             q_seg=None, kv_seg=None):
+    """Boolean keep-mask from absolute positions (and, for packed
+    sequences, segment ids). Shapes: (Sq,Skv) when all inputs are 1D,
+    else (B,Sq,Skv). kv slots with position < 0 are invalid (empty cache
+    slots / padding). With segments, a pair is kept only when both
+    tokens carry the same id -- packed fragments never cross-attend
+    (packing semantics: docs/data_format.md)."""
+    qp, kp = _pair_grid(q_pos, kv_pos)
     ok = kp >= 0
     if causal:
         ok &= kp <= qp
     if window is not None:
         ok &= kp > qp - window
+    if q_seg is not None:
+        qs, ks = _pair_grid(q_seg, kv_seg)
+        ok = ok & (qs == ks)
     return ok
 
 
@@ -59,21 +71,21 @@ def _scores(q, k, scale, cap):
 
 
 def dense_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
-                    softcap=None):
+                    softcap=None, q_seg=None, kv_seg=None):
     """Full-materialization path. q: (B,Sq,H,Dh); k,v: (B,Skv,Hkv,Dh)."""
     B, Sq, H, Dh = q.shape
     Hkv = k.shape[2]
     G = H // Hkv
     qg = q.reshape(B, Sq, Hkv, G, Dh)
     s = _scores(qg, k, 1.0 / jnp.sqrt(Dh).astype(jnp.float32), softcap)
-    s = _apply_mask(s, _mask_ok(q_pos, kv_pos, causal, window))
+    s = _apply_mask(s, _mask_ok(q_pos, kv_pos, causal, window, q_seg, kv_seg))
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
     return out.reshape(B, Sq, H, Dh)
 
 
 def chunked_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
-                      softcap=None, kv_chunk=1024):
+                      softcap=None, kv_chunk=1024, q_seg=None, kv_seg=None):
     """Online-softmax scan over KV chunks: O(Sq * kv_chunk) live memory.
 
     Scan inventory (for roofline correction): trip_count = Skv/kv_chunk,
@@ -81,12 +93,22 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
     """
     B, Sq, H, Dh = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
+    if kv_seg is None:
+        # kv position -1 already masks the chunk padding; a constant
+        # stand-in segment keeps one scan body for both cases
+        kv_seg_c = None
+    else:
+        kv_seg_c = kv_seg
     if Skv % kv_chunk:
         pad = kv_chunk - Skv % kv_chunk
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         pad_spec = ((0, pad),) if kv_pos.ndim == 1 else ((0, 0), (0, pad))
         kv_pos = jnp.pad(kv_pos, pad_spec, constant_values=-1)
+        if kv_seg_c is not None:
+            seg_spec = ((0, pad),) if kv_seg_c.ndim == 1 else \
+                ((0, 0), (0, pad))
+            kv_seg_c = jnp.pad(kv_seg_c, seg_spec, constant_values=-1)
         Skv += pad
     n = Skv // kv_chunk
     G = H // Hkv
@@ -99,12 +121,22 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
         ps = kv_pos.reshape(n, kv_chunk)
     else:
         ps = kv_pos.reshape(B, n, kv_chunk).transpose(1, 0, 2)
+    if kv_seg_c is None:
+        sgs = None
+    elif kv_seg_c.ndim == 1:
+        sgs = kv_seg_c.reshape(n, kv_chunk)
+    else:
+        sgs = kv_seg_c.reshape(B, n, kv_chunk).transpose(1, 0, 2)
 
     def body(carry, inp):
         m, l, acc = carry
-        kc, vc, pc = inp
+        if sgs is None:
+            kc, vc, pc = inp
+            sc = None
+        else:
+            kc, vc, pc, sc = inp
         s = _scores(qg, kc, scale, softcap)                     # (B,Hkv,G,Sq,c)
-        s = _apply_mask(s, _mask_ok(q_pos, pc, causal, window))
+        s = _apply_mask(s, _mask_ok(q_pos, pc, causal, window, q_seg, sc))
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -116,9 +148,9 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
     m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
     a0 = jnp.zeros((B, Hkv, G, Sq, Dh), v.dtype)
+    xs = (ks, vs, ps) if sgs is None else (ks, vs, ps, sgs)
     # remat: don't save per-chunk score/probability tiles for backward
-    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
-                                  (ks, vs, ps))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0), xs)
     out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dh)
 
@@ -206,22 +238,29 @@ def paged_attention(q, k_pages, v_pages, page_table, q_pos, seq_lens, *,
 
 
 def attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
-              softcap=None, kv_chunk: int | None = None):
+              softcap=None, kv_chunk: int | None = None, segments=None):
     """Dispatcher. Chooses the sub-quadratic/banded path for training with a
     window, the chunked path for long KV, dense otherwise.
 
     The banded path assumes batch-uniform positions (it reads row 0 of a
     2D position array), so it is only taken for 1D positions -- ragged
     left-padded prefill batches (per-row positions, serve scheduler)
-    fall through to the chunked/dense paths, whose masks are per-row."""
+    fall through to the chunked/dense paths, whose masks are per-row.
+
+    `segments` are per-token segment ids for packed self-attention
+    ((B,S) or (S,), 0 = padding): pairs from different segments are
+    masked. The banded path carries no segment plumbing, so packed
+    batches always take the chunked/dense paths."""
     Sq, Skv = q.shape[1], k.shape[1]
     if (window is not None and Sq == Skv and Sq > window
-            and q_pos.ndim == 1 and kv_pos.ndim == 1):
+            and q_pos.ndim == 1 and kv_pos.ndim == 1 and segments is None):
         return sliding_window_attention(q, k, v, q_pos, kv_pos, window=window,
                                         softcap=softcap)
     if kv_chunk is not None and Skv > 2 * kv_chunk and Sq > 1:
         return chunked_attention(q, k, v, q_pos, kv_pos, causal=causal,
                                  window=window, softcap=softcap,
-                                 kv_chunk=kv_chunk)
+                                 kv_chunk=kv_chunk, q_seg=segments,
+                                 kv_seg=segments)
     return dense_attention(q, k, v, q_pos, kv_pos, causal=causal,
-                           window=window, softcap=softcap)
+                           window=window, softcap=softcap, q_seg=segments,
+                           kv_seg=segments)

@@ -71,12 +71,13 @@ def _qkv(p, x, cfg, layer, policy, positions):
     return q, k, v
 
 
-def attn_train(p, x, positions, cfg, layer, policy: QuantPolicy):
+def attn_train(p, x, positions, cfg, layer, policy: QuantPolicy,
+               segments=None):
     q, k, v = _qkv(p, x, cfg, layer, policy, positions)
     out = attn_mod.attention(
         q, k, v, positions, positions, causal=layer.get("causal", True),
         window=layer.get("window"), softcap=cfg.attn_softcap,
-        kv_chunk=cfg.attn_chunk)
+        kv_chunk=cfg.attn_chunk, segments=segments)
     out = out.reshape(*x.shape[:2], -1)
     return fp4_linear(out, p["wo"], policy=policy, name="wo")
 
@@ -374,14 +375,20 @@ def init_layer(pf: ParamFactory, cfg, layer: dict):
     return p
 
 
-def layer_train(p, x, positions, cfg, layer: dict, policy: QuantPolicy):
+def layer_train(p, x, positions, cfg, layer: dict, policy: QuantPolicy,
+                segments=None):
     aux = jnp.float32(0.0)
     h = _norm(p["ln_attn"], x, cfg)
     if cfg.use_mla:
         from . import mla
+        if segments is not None:
+            raise NotImplementedError(
+                "packed segment masking is not threaded through the MLA "
+                "path; train packed batches with use_mla=False")
         a = mla.mla_train(p["attn"], h, positions, cfg, policy)
     else:
-        a = attn_train(p["attn"], h, positions, cfg, layer, policy)
+        a = attn_train(p["attn"], h, positions, cfg, layer, policy,
+                       segments=segments)
     if "ln_post_attn" in p:
         a = _norm(p["ln_post_attn"], a, cfg)
     x = x + a

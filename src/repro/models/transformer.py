@@ -132,21 +132,28 @@ class CausalLM:
         return params["embed"].T.astype(self.policy.compute_dtype)
 
     # ------------------------------------------------------------ layer exec
-    def _apply_train(self, p, shared_p, x, positions, layer):
+    def _apply_train(self, p, shared_p, x, positions, layer, segments=None):
         cfg, policy = self.cfg, self.policy
         kind = layer["kind"]
+        if segments is not None and kind in ("ssm", "rwkv"):
+            # recurrent state carries across the whole row -- packing
+            # isolation is an attention-mask concept and doesn't apply
+            raise NotImplementedError(
+                f"packed segment masking unsupported for {kind!r} layers")
         if kind in ("attn", "mla"):
-            y, aux = blocks.layer_train(p, x, positions, cfg, layer, policy)
+            y, aux = blocks.layer_train(p, x, positions, cfg, layer, policy,
+                                        segments=segments)
         elif kind == "ssm":
             y, aux = ssm.ssm_train(p, x, positions, cfg, layer, policy), 0.0
         elif kind == "rwkv":
             y, aux = rwkv.rwkv_train(p, x, positions, cfg, layer, policy), 0.0
         elif kind == "shared_attn":
             y, aux = blocks.layer_train(shared_p, x, positions, cfg,
-                                        self._shared_layer(), policy)
+                                        self._shared_layer(), policy,
+                                        segments=segments)
         return self.constrain(y), jnp.float32(aux)
 
-    def backbone(self, params, x, positions):
+    def backbone(self, params, x, positions, segments=None):
         """Runs all layers; returns (hidden, total_aux_loss)."""
         cfg = self.cfg
         shared_p = params.get("shared")
@@ -161,7 +168,8 @@ class CausalLM:
                     # nested remat: group-level remat alone lets XLA keep all
                     # in-group layer recomputations live during backward
                     def one(p, sp, x, positions, _layer=layer):
-                        return self._apply_train(p, sp, x, positions, _layer)
+                        return self._apply_train(p, sp, x, positions, _layer,
+                                                 segments=segments)
                     if cfg.remat and len(group_plan) > 1:
                         one = _remat(cfg)(one)
                     x, a = one(stacked_slice[p_idx], shared_p, x, positions)
@@ -182,7 +190,8 @@ class CausalLM:
 
         for i, (p, layer) in enumerate(zip(tail_params, tail_plan)):
             def fn(p, shared_p, x, positions, _layer=layer):
-                return self._apply_train(p, shared_p, x, positions, _layer)
+                return self._apply_train(p, shared_p, x, positions, _layer,
+                                         segments=segments)
             if cfg.remat:
                 # remat regions are traced at an inner level; per-layer
                 # telemetry requires remat=False (the obs configuration).
@@ -194,16 +203,20 @@ class CausalLM:
 
     # ------------------------------------------------------------------ loss
     def loss(self, params, batch):
+        """Packed batches additionally carry (B,S) `segment_ids` (0 = pad,
+        data/packing.py): attention is then segment-isolated and the
+        cross-fragment label predictions are masked via `loss_mask`."""
         cfg = self.cfg
         x = self._embed_in(params, batch)
         B, S = x.shape[:2]
         positions = batch.get("positions",
                               jnp.arange(S, dtype=jnp.int32))
+        segments = batch.get("segment_ids")
         # Quant-health collection (repro.obs): records made while tracing
         # the backbone are harvested here, inside the same trace, and flow
         # out through the aux metrics dict (survives jit / value_and_grad).
         with obs.collect(enabled=self.policy.obs_metrics) as col:
-            x, aux = self.backbone(params, x, positions)
+            x, aux = self.backbone(params, x, positions, segments=segments)
         head_w = self._head_w(params)
         tokens = batch["labels"] if cfg.frontend == "embeddings" else \
             batch["tokens"]

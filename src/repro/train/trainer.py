@@ -12,6 +12,14 @@
     collapse sentinel that rides the NaN-skip machinery -- on trip the
     update is skipped, a checkpoint is written, and (when a fallback step
     function is provided) training flips to the bf16 arm.
+  * streaming input (repro.data v2; DESIGN.md §14): instead of a
+    step-indexed `batch_fn`, pass a checkpointable `loader` (PackedStream
+    / SyntheticStream, optionally wrapped in a DevicePrefetcher). The
+    loader's `state_dict()` is serialized into every checkpoint
+    (`extra["data"]`) and restored on resume and on failure-recovery
+    rollback, so the token stream is bit-exact across restarts.
+    Input-pipeline health (data/stall_ms, data/queue_depth,
+    data/pack_frac) rides the obs JSONL sink and rolling window.
 
 Host transfers are batched: loss / grad_norm / obs are fetched with ONE
 `jax.device_get` per step so device dispatch stays pipelined.
@@ -69,17 +77,25 @@ class StragglerWatchdog:
 
 
 class Trainer:
-    def __init__(self, step_fn: Callable, state, batch_fn: Callable,
-                 cfg: TrainerConfig, place_batch: Callable | None = None,
+    def __init__(self, step_fn: Callable, state, batch_fn: Callable = None,
+                 cfg: TrainerConfig = None,
+                 place_batch: Callable | None = None,
                  fail_injector: Callable | None = None,
-                 fallback_step_fn: Callable | None = None):
+                 fallback_step_fn: Callable | None = None,
+                 loader=None):
         """step_fn(state, batch) -> (state, metrics); batch_fn(step) -> batch
         (host numpy); place_batch optionally device_puts with shardings.
         fallback_step_fn: bf16-policy step the collapse sentinel swaps to
-        (built by the caller from model with policy.fallback())."""
+        (built by the caller from model with policy.fallback()).
+        loader: checkpointable stream (repro.data: next_batch/state_dict/
+        load_state_dict) used instead of batch_fn; a DevicePrefetcher
+        loader places its own batches, otherwise place_batch applies."""
+        if (batch_fn is None) == (loader is None):
+            raise ValueError("provide exactly one of batch_fn / loader")
         self.step_fn = step_fn
         self.state = state
         self.batch_fn = batch_fn
+        self.loader = loader
         self.cfg = cfg
         self.place_batch = place_batch or (lambda b: b)
         self.fail_injector = fail_injector
@@ -93,10 +109,19 @@ class Trainer:
         self.obs_window = RollingWindow(cfg.obs_window)
         self.sentinel = CollapseSentinel(cfg.sentinel) if cfg.sentinel else None
         self.fallback_active = False
+        self._last_data_stats: dict | None = None
 
     def obs_summary(self) -> dict:
         """Percentile summary of the rolling quant-health window."""
         return self.obs_window.summary()
+
+    def _restore_data_state(self, manifest: dict):
+        """Reseek the loader to the data cursor stored in a checkpoint."""
+        if self.loader is None:
+            return
+        blob = (manifest.get("extra") or {}).get("data")
+        if blob is not None:
+            self.loader.load_state_dict(blob)
 
     def _try_resume(self):
         if not self.cfg.ckpt_dir:
@@ -106,11 +131,37 @@ class Trainer:
             self.state, manifest = ckpt_mod.restore(self.cfg.ckpt_dir,
                                                     self.state)
             self.start_step = int(jax.device_get(self.state["step"]))
+            self._restore_data_state(manifest)
 
     def _save(self, step: int):
         if self.cfg.ckpt_dir:
-            ckpt_mod.save(self.cfg.ckpt_dir, step, self.state)
+            extra = None
+            if self.loader is not None:
+                # cursor of the next *unconsumed* batch (a prefetching
+                # loader reports its consumed-state, not its read-ahead)
+                extra = {"data": self.loader.state_dict()}
+            ckpt_mod.save(self.cfg.ckpt_dir, step, self.state, extra=extra)
             ckpt_mod.keep_last(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
+
+    def _next_batch(self):
+        """One batch from the loader: (device-ready batch, data stats).
+
+        Stall time (host blocked waiting for input) is measured here; a
+        warm DevicePrefetcher returns in microseconds, the blocking
+        stream pays the full pack+read cost on the critical path."""
+        t0 = time.perf_counter()
+        pb = self.loader.next_batch()
+        stall_ms = (time.perf_counter() - t0) * 1e3
+        from repro.data.prefetch import DevicePrefetcher
+        if isinstance(self.loader, DevicePrefetcher):
+            batch = pb.arrays          # already staged by the prefetcher
+            stats = dict(self.loader.stats(), stall_ms=stall_ms)
+        else:
+            batch = self.place_batch(pb.arrays)
+            stats = {"stall_ms": stall_ms, "queue_depth": 0.0,
+                     "pack_frac": pb.meta.get("pack_frac", 1.0)}
+        self._last_data_stats = stats
+        return batch
 
     def _fetch_host(self, step: int, metrics: dict):
         """ONE device_get per step (two transfers would serialize dispatch):
@@ -157,7 +208,10 @@ class Trainer:
         step = self.start_step
         retries = 0
         while step < self.cfg.total_steps:
-            batch = self.place_batch(self.batch_fn(step))
+            if self.loader is not None:
+                batch = self._next_batch()
+            else:
+                batch = self.place_batch(self.batch_fn(step))
             t0 = time.time()
             try:
                 if self.fail_injector:
@@ -170,17 +224,25 @@ class Trainer:
                 retries += 1
                 if retries > self.cfg.max_retries or not self.cfg.ckpt_dir:
                     raise
-                self.state, _ = ckpt_mod.restore(self.cfg.ckpt_dir, self.state)
+                self.state, manifest = ckpt_mod.restore(self.cfg.ckpt_dir,
+                                                        self.state)
                 step = int(jax.device_get(self.state["step"]))
+                self._restore_data_state(manifest)
                 self.history.append({"step": step, "event": "restored",
                                      "error": repr(e)})
                 continue
             dt = time.time() - t0
-            if obs_host is not None:
-                self.obs_window.push({"step": step, "loss": loss, **obs_host})
+            data_stats = None
+            if self._last_data_stats is not None:
+                data_stats = {f"data/{k}": float(v)
+                              for k, v in self._last_data_stats.items()}
+            if obs_host is not None or data_stats is not None:
+                rec = {"step": step, "loss": loss}
+                rec.update(obs_host or {})
+                rec.update(data_stats or {})
+                self.obs_window.push(rec)
                 if self.obs_writer:
-                    self.obs_writer.write(
-                        {"step": step, "loss": loss, **obs_host})
+                    self.obs_writer.write(rec)
             if not np.isfinite(loss):
                 # FP4 divergence guard: skip this update
                 self.nan_skips += 1

@@ -1,0 +1,359 @@
+"""repro.data v2 pipeline tests (DESIGN.md §14, docs/data_format.md):
+
+  * shard writer/reader roundtrip: tokens survive byte-exactly, dtype
+    selection tracks vocab size, manifest is the atomic commit point
+  * packing invariants: fixed shapes, pad conventions, loss-mask rule,
+    per-fragment position restart
+  * the headline resume guarantee -- kill a PackedStream mid-shard,
+    restore from its state_dict, and the next 100 batches are
+    token-identical to an uninterrupted run
+  * DevicePrefetcher: batch-for-batch equivalence with the blocking
+    stream, consumed-state (not read-ahead) checkpointing, restart,
+    producer-error surfacing
+  * Trainer integration: interrupted+resumed training consumes the
+    exact token stream of an uninterrupted run, and data/* health keys
+    ride the obs JSONL sink
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data import (DataConfig, DevicePrefetcher, PackedStream,
+                        ShardReader, ShardWriter, SyntheticLM,
+                        SyntheticStream, make_batch_fn, packing,
+                        synthetic_documents, token_dtype,
+                        write_synthetic_shards)
+
+
+def _write_corpus(tmp_path, n_docs=60, vocab=4096, seed=0,
+                  shard_tokens=4096):
+    cfg = DataConfig(vocab_size=vocab, seq_len=128, global_batch=4,
+                     seed=seed)
+    root = os.path.join(str(tmp_path), "corpus")
+    manifest = write_synthetic_shards(root, cfg, n_docs,
+                                      shard_tokens=shard_tokens)
+    return manifest, cfg
+
+
+# ---------------------------------------------------------------- shards
+def test_token_dtype_tracks_vocab():
+    assert token_dtype(32000) == np.uint16
+    assert token_dtype(65536) == np.uint16
+    assert token_dtype(65537) == np.uint32
+
+
+def test_shard_roundtrip_byte_exact(tmp_path):
+    docs = [np.arange(n, dtype=np.int64) % 500 for n in (3, 70, 1, 41, 9)]
+    w = ShardWriter(str(tmp_path / "c"), vocab_size=500, shard_tokens=64)
+    for d in docs:
+        w.add_document(d)
+    manifest = w.finalize({"note": "test"})
+    r = ShardReader(manifest)
+    assert r.total_docs == len(docs)
+    assert r.total_tokens == sum(len(d) for d in docs)
+    assert len(r.shards) > 1            # 64-token shards forced a roll
+    for i, d in enumerate(docs):
+        np.testing.assert_array_equal(np.asarray(r.doc(i), np.int64), d)
+        assert r.doc_len(i) == len(d)
+
+
+def test_manifest_is_commit_point(tmp_path):
+    w = ShardWriter(str(tmp_path / "c"), vocab_size=100, shard_tokens=1024)
+    w.add_document(np.arange(10))
+    # before finalize there is no manifest -> readers refuse the dir
+    with pytest.raises((FileNotFoundError, OSError)):
+        ShardReader(os.path.join(str(tmp_path / "c"), "manifest.json"))
+    manifest = w.finalize()
+    assert os.path.basename(manifest) == "manifest.json"
+    meta = json.load(open(manifest))
+    assert meta["format"] == "repro-shards-v1" and meta["total_docs"] == 1
+
+
+def test_synthetic_documents_deterministic():
+    import dataclasses
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=2, seed=7)
+    a = list(synthetic_documents(cfg, 12))
+    b = list(synthetic_documents(cfg, 12))
+    assert len(a) == 12
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    c = list(synthetic_documents(dataclasses.replace(cfg, seed=8), 12))
+    assert any(x.shape != y.shape or not np.array_equal(x, y)
+               for x, y in zip(a, c))
+
+
+# --------------------------------------------------------------- packing
+def test_split_spans_covers_document():
+    assert packing.split_spans(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert packing.split_spans(4, 4) == [(0, 4)]
+    assert packing.split_spans(0, 4) == []
+
+
+def test_best_fit_prefers_tightest_row():
+    # frag of len 3 fits rows with free 3 (exact) and 5; exact wins
+    assert packing.best_fit([3], [5, 3]) == (0, 1)
+    # nothing fits -> None
+    assert packing.best_fit([9], [5, 3]) is None
+    # tie on leftover -> earliest fragment, then lowest row
+    assert packing.best_fit([2, 2], [2, 2]) == (0, 0)
+
+
+def test_assemble_conventions():
+    rows = [[np.array([5, 6, 7]), np.array([8, 9])], [np.array([1])]]
+    pb = packing.assemble(rows, seq_len=6)
+    t, seg = pb.arrays["tokens"], pb.arrays["segment_ids"]
+    pos, lm = pb.arrays["positions"], pb.arrays["loss_mask"]
+    np.testing.assert_array_equal(t[0], [5, 6, 7, 8, 9, 0])
+    np.testing.assert_array_equal(seg[0], [1, 1, 1, 2, 2, 0])
+    np.testing.assert_array_equal(pos[0], [0, 1, 2, 0, 1, -1])
+    # loss only where the predecessor is the same segment
+    np.testing.assert_array_equal(lm[0], [0, 1, 1, 0, 1, 0])
+    np.testing.assert_array_equal(seg[1], [1, 0, 0, 0, 0, 0])
+    assert pb.meta["n_fragments"] == 3
+    assert pb.meta["n_pad_tokens"] == 6
+    assert pb.meta["pack_frac"] == pytest.approx(6 / 12)
+
+
+# ------------------------------------------------------ resume guarantee
+def test_stream_resume_bit_exact_100_batches(tmp_path):
+    """The headline guarantee: kill mid-shard, restore, next 100 batches
+    token-identical to the uninterrupted run."""
+    manifest, _ = _write_corpus(tmp_path, n_docs=40, shard_tokens=2048)
+
+    def mk():
+        return PackedStream(ShardReader(manifest), seq_len=96,
+                            batch_size=3, seed=11, lookahead=6)
+
+    ref = mk()
+    for _ in range(7):                      # advance into the corpus
+        ref.next_batch()
+    snap = ref.state_dict()
+    json.dumps(snap)                        # must be JSON-serializable
+    expect = [ref.next_batch() for _ in range(100)]
+
+    resumed = mk()                          # fresh process simulation
+    resumed.load_state_dict(json.loads(json.dumps(snap)))
+    for i, want in enumerate(expect):
+        got = resumed.next_batch()
+        for k in want.arrays:
+            np.testing.assert_array_equal(
+                got.arrays[k], want.arrays[k],
+                err_msg=f"batch {i} key {k} diverged after resume")
+
+
+def test_stream_state_rejects_mismatch(tmp_path):
+    manifest, _ = _write_corpus(tmp_path, n_docs=10)
+    s = PackedStream(ShardReader(manifest), seq_len=64, batch_size=2,
+                     seed=3)
+    st = s.state_dict()
+    with pytest.raises(ValueError, match="seed mismatch"):
+        PackedStream(ShardReader(manifest), seq_len=64, batch_size=2,
+                     seed=4).load_state_dict(st)
+    with pytest.raises(ValueError, match="version"):
+        s.load_state_dict({**st, "version": 99})
+
+
+def test_stream_epochs_wrap_and_reshuffle(tmp_path):
+    manifest, _ = _write_corpus(tmp_path, n_docs=6, shard_tokens=2048)
+    s = PackedStream(ShardReader(manifest), seq_len=128, batch_size=4,
+                     seed=0)
+    seen_epochs = set()
+    for _ in range(30):
+        s.next_batch()
+        seen_epochs.add(s.state_dict()["epoch"])
+    assert len(seen_epochs) > 1             # tiny corpus must wrap
+
+
+def test_synthetic_stream_matches_batch_fn():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=2, seed=5)
+    stream = SyntheticStream(SyntheticLM(cfg))
+    batch_fn = make_batch_fn(cfg)
+    for step in range(4):
+        pb = stream.next_batch()
+        np.testing.assert_array_equal(pb.arrays["tokens"], batch_fn(step))
+    st = stream.state_dict()
+    stream.next_batch()
+    stream.load_state_dict(st)
+    np.testing.assert_array_equal(stream.next_batch().arrays["tokens"],
+                                  batch_fn(4))
+
+
+# ------------------------------------------------------------- prefetch
+def test_prefetcher_matches_blocking_stream(tmp_path):
+    manifest, _ = _write_corpus(tmp_path, n_docs=30)
+    ref = PackedStream(ShardReader(manifest), seq_len=64, batch_size=2,
+                       seed=1)
+    pf = DevicePrefetcher(
+        PackedStream(ShardReader(manifest), seq_len=64, batch_size=2,
+                     seed=1), depth=3)
+    try:
+        for _ in range(25):
+            want, got = ref.next_batch(), pf.next_batch()
+            for k in want.arrays:
+                np.testing.assert_array_equal(got.arrays[k],
+                                              want.arrays[k])
+    finally:
+        pf.stop()
+
+
+def test_prefetcher_reports_consumed_state(tmp_path):
+    """state_dict() must describe the *consumed* cursor, never the
+    producer's read-ahead position: save -> restore -> next must equal
+    the uninterrupted sequence."""
+    manifest, _ = _write_corpus(tmp_path, n_docs=30)
+
+    def mk():
+        return DevicePrefetcher(
+            PackedStream(ShardReader(manifest), seq_len=64, batch_size=2,
+                         seed=2), depth=3)
+
+    pf = mk()
+    try:
+        for _ in range(5):
+            pf.next_batch()
+        snap = pf.state_dict()
+        expect = [pf.next_batch() for _ in range(20)]
+    finally:
+        pf.stop()
+
+    pf2 = mk()
+    try:
+        pf2.load_state_dict(json.loads(json.dumps(snap)))
+        for i, want in enumerate(expect):
+            got = pf2.next_batch()
+            for k in want.arrays:
+                np.testing.assert_array_equal(
+                    got.arrays[k], want.arrays[k],
+                    err_msg=f"post-restore batch {i} key {k}")
+    finally:
+        pf2.stop()
+
+
+def test_prefetcher_place_fn_and_stats(tmp_path):
+    manifest, _ = _write_corpus(tmp_path, n_docs=10)
+    calls = []
+
+    def place(arrays):
+        calls.append(sorted(arrays))
+        return {k: v + 0 for k, v in arrays.items()}
+
+    pf = DevicePrefetcher(
+        PackedStream(ShardReader(manifest), seq_len=64, batch_size=2,
+                     seed=0), place_fn=place, depth=2)
+    try:
+        for _ in range(4):
+            pf.next_batch()
+        stats = pf.stats()
+    finally:
+        pf.stop()
+    assert calls and "tokens" in calls[0]
+    assert set(stats) == {"stall_ms", "queue_depth", "pack_frac"}
+    assert 0.0 < stats["pack_frac"] <= 1.0
+    # stats() drains: an immediate second call averages over nothing new
+    assert pf.stats()["pack_frac"] == 0.0
+
+
+def test_prefetcher_surfaces_producer_error():
+    class Boom:
+        def state_dict(self):
+            return {}
+
+        def load_state_dict(self, s):
+            pass
+
+        def next_batch(self):
+            raise RuntimeError("shard corrupted")
+
+    pf = DevicePrefetcher(Boom(), depth=1)
+    try:
+        with pytest.raises(RuntimeError, match="producer died"):
+            pf.next_batch()
+    finally:
+        pf.stop()
+
+
+def test_prefetcher_stop_joins_thread(tmp_path):
+    manifest, _ = _write_corpus(tmp_path, n_docs=10)
+    pf = DevicePrefetcher(
+        PackedStream(ShardReader(manifest), seq_len=64, batch_size=2,
+                     seed=0), depth=2)
+    pf.next_batch()
+    before = threading.active_count()
+    pf.stop()
+    pf.stop()                               # idempotent
+    assert threading.active_count() <= before
+
+
+# ------------------------------------------------------------- trainer
+def _tiny_trainer(loader, ckpt_dir, total_steps, record):
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    def step_fn(state, batch):
+        record.append(np.asarray(batch["tokens"]).copy())
+        return ({"step": state["step"] + 1},
+                {"loss": np.float32(1.0)})
+
+    return Trainer(step_fn, {"step": np.int32(0)}, loader=loader,
+                   cfg=TrainerConfig(total_steps=total_steps,
+                                     ckpt_dir=ckpt_dir, ckpt_every=4,
+                                     log_every=100))
+
+
+def test_trainer_loader_resume_token_identical(tmp_path):
+    manifest, _ = _write_corpus(tmp_path, n_docs=40)
+
+    def mk_loader():
+        return PackedStream(ShardReader(manifest), seq_len=64,
+                            batch_size=2, seed=9)
+
+    # uninterrupted reference run
+    ref_batches = []
+    _tiny_trainer(mk_loader(), str(tmp_path / "ck_ref"), 12,
+                  ref_batches).run()
+
+    # interrupted at step 7 (mid-interval: last checkpoint at step 4)
+    part = []
+    _tiny_trainer(mk_loader(), str(tmp_path / "ck"), 7, part).run()
+    resumed = []
+    _tiny_trainer(mk_loader(), str(tmp_path / "ck"), 12, resumed).run()
+
+    # run() checkpoints at exit, so the resumed run replays nothing and
+    # the concatenation equals the uninterrupted stream token-for-token
+    full = part + resumed
+    assert len(full) == len(ref_batches) == 12
+    for i, (a, b) in enumerate(zip(full, ref_batches)):
+        np.testing.assert_array_equal(a, b,
+                                      err_msg=f"trainer batch {i}")
+
+
+def test_trainer_requires_exactly_one_source():
+    from repro.train.trainer import Trainer, TrainerConfig
+    cfg = TrainerConfig(total_steps=1)
+    with pytest.raises(ValueError, match="exactly one"):
+        Trainer(lambda s, b: (s, {}), {}, cfg=cfg)
+    with pytest.raises(ValueError, match="exactly one"):
+        Trainer(lambda s, b: (s, {}), {}, batch_fn=lambda i: {},
+                loader=object(), cfg=cfg)
+
+
+def test_trainer_obs_jsonl_carries_data_keys(tmp_path):
+    manifest, _ = _write_corpus(tmp_path, n_docs=20)
+    loader = PackedStream(ShardReader(manifest), seq_len=64,
+                          batch_size=2, seed=0)
+    log = tmp_path / "obs.jsonl"
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    def step_fn(state, batch):
+        return {"step": state["step"] + 1}, {"loss": np.float32(0.5)}
+
+    Trainer(step_fn, {"step": np.int32(0)}, loader=loader,
+            cfg=TrainerConfig(total_steps=3, obs_jsonl=str(log),
+                              log_every=100)).run()
+    recs = [json.loads(l) for l in open(log)]
+    assert len(recs) == 3
+    for r in recs:
+        assert {"data/stall_ms", "data/queue_depth",
+                "data/pack_frac"} <= set(r)
