@@ -1,0 +1,24 @@
+"""repro.chaos -- fault-injection & crash-consistency harness (DESIGN.md §15).
+
+Three layers:
+
+  * `hooks` -- zero-cost-when-disabled injection seams (`chaos_point`)
+    that production code exposes at its crash-critical moments, plus the
+    `REPRO_CHAOS_KILL` env protocol for real subprocess kills;
+  * `inject` -- the fault menu: NaN/outlier bursts, simulated device
+    loss, SIGKILL stand-ins, byte-level artifact corruption, queue
+    stalls;
+  * `scenarios` -- the seeded scenario runner that composes injectors,
+    drives short train/data/serve sessions through them, and asserts the
+    recovery invariants (`python -m repro.chaos --scenarios fast`).
+
+Only `hooks` is imported here: production modules (trainer, checkpoint,
+shards, prefetch, serve engine, sentinel) import `repro.chaos.hooks`,
+and pulling the scenario runner in at that point would be a circular
+import -- `scenarios` imports the whole stack it tests.
+"""
+from .hooks import (SimulatedCrash, chaos_point, clear, crash_handler,
+                    install, installed, kill_env, uninstall)
+
+__all__ = ["SimulatedCrash", "chaos_point", "clear", "crash_handler",
+           "install", "installed", "kill_env", "uninstall"]

@@ -1,0 +1,55 @@
+"""CLI entry: `python -m repro.chaos --scenarios fast --seed 0`.
+
+Runs the selected fault-injection scenarios (chaos/scenarios.py) under a
+seeded schedule, prints one PASS/FAIL line per scenario, optionally
+writes a JSONL journal (one record per scenario plus a trailing summary
+line -- the artifact the CI chaos job uploads), and exits non-zero if
+any scenario failed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import scenarios
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.chaos",
+        description="Fault-injection & crash-consistency scenario runner")
+    p.add_argument("--scenarios", default="fast",
+                   help="tag or comma list of tags/names "
+                        "(fast, full, ckpt, data, trainer, serve, ...)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="schedule seed (scenarios replay exactly per seed)")
+    p.add_argument("--journal", default=None,
+                   help="write a JSONL journal of results to this path")
+    p.add_argument("--keep-work", action="store_true",
+                   help="keep per-scenario scratch dirs for post-mortem")
+    p.add_argument("--list", action="store_true",
+                   help="list matching scenarios and exit")
+    a = p.parse_args(argv)
+
+    try:
+        selected = scenarios.names(a.scenarios)
+    except ValueError as e:
+        p.error(str(e))
+    if a.list:
+        for name in selected:
+            _, tags = scenarios._REGISTRY[name]
+            doc = (scenarios._REGISTRY[name][0].__doc__ or "").split("\n")[0]
+            print(f"{name:36s} [{','.join(sorted(tags - {'all'}))}]  {doc}")
+        return 0
+
+    results = scenarios.run_scenarios(a.scenarios, seed=a.seed,
+                                      journal=a.journal,
+                                      keep_work=a.keep_work)
+    n_ok = sum(r.ok for r in results)
+    print(f"[chaos] {n_ok}/{len(results)} scenarios green "
+          f"(selector={a.scenarios!r} seed={a.seed})")
+    return 0 if n_ok == len(results) and results else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

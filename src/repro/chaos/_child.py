@@ -1,0 +1,50 @@
+"""Child process body for subprocess kill scenarios.
+
+Runs a tiny recording train session over a packed-shard corpus and, if
+it survives to the end, dumps one CRC per consumed batch.  The parent
+(`scenarios.subprocess_kill_resume`) launches it three times: once as an
+uninterrupted reference, once with ``REPRO_CHAOS_KILL`` armed (the env
+hook in `hooks` hard-exits with ``os._exit(137)`` at the chaos point --
+a faithful SIGKILL stand-in: no atexit, no finally, no flushes), and
+once more to resume.  Token-stream CRCs are compared across the runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import zlib
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--corpus", required=True)
+    p.add_argument("--ckpt", required=True)
+    p.add_argument("--total", type=int, required=True)
+    p.add_argument("--out", required=True)
+    a = p.parse_args()
+
+    import numpy as np
+
+    from repro.data.shards import ShardReader
+    from repro.data.stream import PackedStream
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    recs: list[dict] = []
+
+    def step_fn(state, batch):
+        s = int(state["step"])
+        tok = np.asarray(batch["tokens"])
+        recs.append({"step": s, "crc": zlib.crc32(tok.tobytes())})
+        return {"step": np.int32(s + 1)}, {"loss": np.float32(1.0)}
+
+    loader = PackedStream(ShardReader(a.corpus), seq_len=32, batch_size=2,
+                          seed=0)
+    cfg = TrainerConfig(total_steps=a.total, ckpt_dir=a.ckpt, ckpt_every=4,
+                        log_every=10_000)
+    Trainer(step_fn, {"step": np.int32(0)}, loader=loader, cfg=cfg).run()
+    with open(a.out, "w") as f:
+        json.dump(recs, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Chaos injection points (`repro.chaos`; DESIGN.md §15).
+
+Production modules call ``chaos_point(name, value)`` at the seams the
+fault-injection harness needs -- immediately before a checkpoint rename,
+inside the prefetch producer loop, on the sentinel's input record, and so
+on.  With no handler installed the call is a module-level bool check and
+returns ``value`` unchanged, so the seams are zero-cost in real runs.
+
+Two handler shapes share one registry:
+
+  * crash/stall handlers ignore ``value`` and raise (``SimulatedCrash``)
+    or sleep -- used for kill-mid-write and queue-stall scenarios;
+  * transform handlers return a replacement ``value`` -- used to poison
+    the host-side loss or the sentinel's health record.
+
+``SimulatedCrash`` derives from ``BaseException`` on purpose: a SIGKILL
+does not unwind through ``except Exception`` recovery paths, and neither
+may its in-process stand-in (the trainer's retry loop must not "recover"
+from a simulated process death).
+
+Real process death for subprocess scenarios comes from the environment:
+``REPRO_CHAOS_KILL=<point>[:<nth>]`` arms an ``os._exit(137)`` on the
+nth hit of that point in this process (read once at import, so set it
+before launching the child that should die).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Any, Callable
+
+KILL_ENV = "REPRO_CHAOS_KILL"
+KILL_EXIT_CODE = 137          # what a SIGKILL-ed shell child reports
+
+
+class SimulatedCrash(BaseException):
+    """In-process stand-in for SIGKILL at a chaos point."""
+
+
+_lock = threading.Lock()
+_handlers: dict[str, list[Callable[..., Any]]] = {}
+_armed = False                # fast-path gate: True iff any handler exists
+_env_installed = False
+
+
+def _rearm() -> None:
+    global _armed
+    _armed = any(_handlers.values())
+
+
+def install(point: str, handler: Callable[..., Any]) -> Callable[..., Any]:
+    """Register `handler(value, **ctx) -> value` at `point`; returns it."""
+    with _lock:
+        _handlers.setdefault(point, []).append(handler)
+        _rearm()
+    return handler
+
+
+def uninstall(point: str, handler: Callable[..., Any]) -> None:
+    """Remove one previously installed handler (no-op if absent)."""
+    with _lock:
+        lst = _handlers.get(point, [])
+        if handler in lst:
+            lst.remove(handler)
+        _rearm()
+
+
+def clear() -> None:
+    """Drop every handler (scenario teardown)."""
+    with _lock:
+        _handlers.clear()
+        _rearm()
+
+
+@contextlib.contextmanager
+def installed(point: str, handler: Callable[..., Any]):
+    """Scoped `install`; always uninstalls, even on SimulatedCrash."""
+    install(point, handler)
+    try:
+        yield handler
+    finally:
+        uninstall(point, handler)
+
+
+def chaos_point(point: str, value: Any = None, **ctx: Any) -> Any:
+    """Run any handlers installed at `point`; identity when disarmed.
+
+    Handlers run in installation order; each receives the previous
+    handler's return as `value` plus the call-site keyword context.
+    """
+    if not _armed:
+        return value
+    with _lock:
+        handlers = list(_handlers.get(point, ()))
+    for h in handlers:
+        value = h(value, **ctx)
+    return value
+
+
+def crash_handler(nth: int = 1) -> Callable[..., Any]:
+    """Handler raising SimulatedCrash on its nth invocation."""
+    hits = {"n": 0}
+
+    def handler(value, **ctx):
+        hits["n"] += 1
+        if hits["n"] >= nth:
+            raise SimulatedCrash(f"chaos crash (hit {hits['n']})")
+        return value
+    return handler
+
+
+def kill_env(point: str, nth: int = 1) -> dict[str, str]:
+    """Env block arming a hard `os._exit` at `point` in a child process."""
+    return {KILL_ENV: f"{point}:{nth}"}
+
+
+def _install_env_kill() -> None:
+    """Latch REPRO_CHAOS_KILL (read once, at import) into a kill handler."""
+    global _env_installed
+    spec = os.environ.get(KILL_ENV)
+    if _env_installed or not spec:
+        return
+    _env_installed = True
+    point, _, nth_s = spec.partition(":")
+    nth = int(nth_s) if nth_s else 1
+    hits = {"n": 0}
+
+    def die(value, **ctx):
+        hits["n"] += 1
+        if hits["n"] >= nth:
+            # die like SIGKILL: no atexit, no finally blocks, no flushes
+            os._exit(KILL_EXIT_CODE)
+        return value
+
+    install(point, die)
+
+
+_install_env_kill()

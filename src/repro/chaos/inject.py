@@ -1,0 +1,145 @@
+"""Fault injectors for the chaos harness (DESIGN.md §15).
+
+Each injector is either a handler for a `hooks.chaos_point` seam or a
+direct filesystem mutation.  They are deliberately small and composable:
+scenarios (`chaos/scenarios.py`) wire them to seeded schedules and assert
+the recovery invariants; the injectors themselves carry no policy.
+
+Seam vocabulary (the points production code exposes):
+
+    ckpt.pre_arrays / ckpt.pre_manifest / ckpt.pre_rename /
+    ckpt.post_rename          train/checkpoint.py `save`
+    shard.pre_idx / shard.pre_manifest
+                              data/shards.py `ShardWriter`
+    prefetch.tick             data/prefetch.py producer loop (per draw)
+    trainer.loss              host-side loss scalar, after device_get
+    sentinel.obs              the record CollapseSentinel.observe sees
+    serve.pre_step            serve/engine.py `ServeEngine.step`
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from . import hooks
+
+
+# --------------------------------------------------------------------------
+# value-poisoning handlers (transform seams)
+# --------------------------------------------------------------------------
+
+def nan_loss_burst(steps):
+    """`trainer.loss` handler: loss becomes NaN on the given step numbers.
+
+    Models an FP4 divergence burst (paper Fig. 6c) without touching the
+    jitted step -- the trainer's NaN-skip budget is the path under test.
+    """
+    steps = frozenset(int(s) for s in steps)
+
+    def handler(loss, step=None, **ctx):
+        return float("nan") if step in steps else loss
+    return handler
+
+
+def outlier_obs_burst(steps, *, snr_db: float = -3.0,
+                      clamp_frac: float = 0.9):
+    """`sentinel.obs` handler: health record shows a collapse signature.
+
+    Overwrites the aggregate keys the sentinel thresholds (SNR through
+    the floor, clamp fraction far above the OCC quantile design) on the
+    scheduled steps -- the trip -> checkpoint -> bf16-fallback path is
+    the thing under test, not the metric computation.
+    """
+    steps = frozenset(int(s) for s in steps)
+
+    def handler(obs, step=None, **ctx):
+        if step in steps and obs is not None:
+            obs = dict(obs, **{"agg/min_snr_db": snr_db,
+                               "agg/max_clamp_frac": clamp_frac})
+        return obs
+    return handler
+
+
+def fail_step_once(step: int, exc: Exception | None = None):
+    """Trainer `fail_injector`: simulated device loss at one step.
+
+    Raises a plain Exception (unlike SimulatedCrash) because device loss
+    *is* recoverable in-process: the trainer's retry path must roll back
+    to the last checkpoint and continue.
+    """
+    armed = {"on": True}
+
+    def injector(s):
+        if s == step and armed["on"]:
+            armed["on"] = False
+            raise exc or RuntimeError(f"injected device loss at step {s}")
+    return injector
+
+
+# --------------------------------------------------------------------------
+# crash / stall handlers (fire seams)
+# --------------------------------------------------------------------------
+
+def crash_at(point: str, nth: int = 1):
+    """Install an in-process SIGKILL stand-in at `point` (returns handler).
+
+    Pair with `hooks.uninstall` / `hooks.clear`, or use
+    `hooks.installed(point, hooks.crash_handler(nth))` for scoping.
+    """
+    return hooks.install(point, hooks.crash_handler(nth))
+
+
+def stall(gate, timeout: float = 30.0):
+    """Handler that blocks on `gate` (a threading.Event) when not set.
+
+    Installed on `prefetch.tick` it freezes the producer thread exactly
+    where a slow filesystem would -- mid-draw, holding no lock the
+    consumer needs.  The `timeout` bounds test runtime if a scenario
+    forgets to release the gate.
+    """
+    def handler(value, **ctx):
+        gate.wait(timeout)
+        return value
+    return handler
+
+
+def sleep_stall(seconds: float):
+    """Handler adding a fixed delay (coarse queue-pressure injection)."""
+    def handler(value, **ctx):
+        time.sleep(seconds)
+        return value
+    return handler
+
+
+# --------------------------------------------------------------------------
+# byte-level artifact corruption
+# --------------------------------------------------------------------------
+
+def corrupt_bytes(path: str, rng: np.random.Generator,
+                  n_bytes: int = 64) -> None:
+    """Overwrite `n_bytes` at random offsets with random bytes, in place."""
+    size = os.path.getsize(path)
+    if size == 0:
+        return
+    n = min(n_bytes, size)
+    offsets = rng.integers(0, size, size=n)
+    junk = rng.integers(0, 256, size=n, dtype=np.uint8)
+    with open(path, "r+b") as f:
+        for off, b in zip(offsets, junk):
+            f.seek(int(off))
+            f.write(bytes([int(b) ^ 0xFF]))
+
+
+def truncate_file(path: str, keep_frac: float = 0.5) -> None:
+    """Cut a file short -- the on-disk shape of a kill mid-write."""
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(int(size * keep_frac))
+
+
+def garbage_file(path: str, payload: bytes = b"{]] not json") -> None:
+    """Replace a file's contents wholesale (foreign/hostile artifact)."""
+    with open(path, "wb") as f:
+        f.write(payload)

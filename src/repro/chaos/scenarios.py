@@ -1,0 +1,804 @@
+"""Seeded fault-injection scenarios and their recovery invariants.
+
+Each scenario is a function `fn(ctx)` registered with `@scenario(*tags)`.
+It composes injectors from `chaos.inject` with a short real train/serve
+session (tiny recording step functions -- no jit needed for the fast
+set), then records invariant checks on the `ctx`:
+
+  * a run killed mid-checkpoint and resumed consumes a token stream
+    identical to an uninterrupted run (the headline invariant),
+  * no `.tmp` / `.old.<pid>` debris survives recovery,
+  * a sentinel trip checkpoints and flips to the bf16 fallback step,
+  * corrupted artifacts (checkpoints, shard manifests, autotune caches)
+    are rejected or skipped with clean errors, never half-loaded,
+  * a wedged prefetch producer surfaces as a timeout and is fenced off
+    by `restart`, never leaking a stale batch.
+
+Scenarios are deterministic: every random choice comes from a
+`np.random.default_rng` seeded with (run seed, scenario name), so
+`python -m repro.chaos --scenarios fast --seed 0` replays exactly.
+Tags select subsets: "fast" runs in seconds with no model compilation;
+"full" adds subprocess SIGKILL-style kills and a real-model serve
+scenario.  `hooks.clear()` runs between scenarios so no handler leaks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+import traceback
+import warnings
+import zlib
+from typing import Callable
+
+import numpy as np
+
+from . import hooks, inject
+
+_REGISTRY: dict[str, tuple[Callable, frozenset]] = {}
+_FINAL_RE = re.compile(r"step_\d+$")
+
+
+def scenario(*tags: str):
+    """Register a scenario under its function name with the given tags."""
+    tagset = frozenset(tags) | {"all"}
+
+    def deco(fn):
+        _REGISTRY[fn.__name__] = (fn, tagset)
+        return fn
+    return deco
+
+
+def names(selector: str = "fast") -> list[str]:
+    """Scenario names matching a selector: tag(s) and/or explicit names.
+
+    "fast" -> the quick set, "full"/"all" -> everything, or a comma list
+    mixing tags and scenario names ("ckpt,prefetch_stall_restart").
+    """
+    wanted = {t.strip() for t in selector.split(",") if t.strip()}
+    if "full" in wanted:
+        wanted.add("all")
+    out = []
+    for name, (_, tags) in _REGISTRY.items():
+        if name in wanted or (wanted & tags):
+            out.append(name)
+    unknown = wanted - set(_REGISTRY) - {t for _, ts in _REGISTRY.values()
+                                         for t in ts}
+    if unknown:
+        raise ValueError(f"unknown scenario/tag selector(s): "
+                         f"{sorted(unknown)}")
+    return out
+
+
+@dataclasses.dataclass
+class Check:
+    name: str
+    ok: bool
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    name: str
+    seed: int
+    ok: bool
+    seconds: float
+    checks: list[Check]
+    error: str | None = None
+
+    def to_record(self) -> dict:
+        return {"scenario": self.name, "seed": self.seed, "ok": self.ok,
+                "seconds": round(self.seconds, 3),
+                "checks": [dataclasses.asdict(c) for c in self.checks],
+                "error": self.error}
+
+
+class Ctx:
+    """Per-scenario context: seeded rng, scratch dir, invariant checks."""
+
+    def __init__(self, name: str, seed: int, workdir: str):
+        self.name = name
+        self.seed = seed
+        self.workdir = workdir
+        self.rng = np.random.default_rng(
+            [seed, zlib.crc32(name.encode()) & 0x7FFFFFFF])
+        self.checks: list[Check] = []
+
+    def subdir(self, name: str) -> str:
+        d = os.path.join(self.workdir, name)
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    def check(self, name: str, ok, detail: str = "") -> bool:
+        self.checks.append(Check(name, bool(ok), detail))
+        return bool(ok)
+
+    def expect_crash(self, name: str, fn: Callable) -> None:
+        """Run `fn`; the installed crash handler must fire."""
+        try:
+            fn()
+        except hooks.SimulatedCrash:
+            self.check(name, True)
+        else:
+            self.check(name, False, "SimulatedCrash did not fire")
+
+
+# --------------------------------------------------------------------------
+# shared builders (tiny recording train runs -- no jit, all host numpy)
+# --------------------------------------------------------------------------
+
+def _build_corpus(root: str, rng, n_docs: int = 32, vocab: int = 97,
+                  shard_tokens: int = 256) -> str:
+    from repro.data.shards import ShardWriter
+    w = ShardWriter(root, vocab_size=vocab, shard_tokens=shard_tokens)
+    for _ in range(n_docs):
+        w.add_document(rng.integers(1, vocab,
+                                    size=int(rng.integers(4, 40))))
+    return w.finalize()
+
+
+def _stream(manifest: str, seed: int = 0, seq_len: int = 32,
+            batch_size: int = 2):
+    from repro.data.shards import ShardReader
+    from repro.data.stream import PackedStream
+    return PackedStream(ShardReader(manifest), seq_len=seq_len,
+                        batch_size=batch_size, seed=seed)
+
+
+def _recording_trainer(loader, ckpt_dir, total: int, record: list,
+                       ckpt_every: int = 4, **cfg_kw):
+    """Trainer whose step_fn records (step, tokens) -- the token stream
+    IS the thing the crash/resume invariants compare."""
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    def step_fn(state, batch):
+        s = int(state["step"])
+        record.append((s, np.asarray(batch["tokens"]).copy()))
+        return {"step": np.int32(s + 1)}, {"loss": np.float32(1.0)}
+
+    cfg = TrainerConfig(total_steps=total, ckpt_dir=ckpt_dir,
+                        ckpt_every=ckpt_every, log_every=10_000, **cfg_kw)
+    return Trainer(step_fn, {"step": np.int32(0)}, loader=loader, cfg=cfg)
+
+
+def _reference_tokens(manifest: str, total: int) -> dict:
+    """step -> tokens of an uninterrupted run (the ground truth)."""
+    rec: list = []
+    _recording_trainer(_stream(manifest), None, total, rec).run(resume=False)
+    return dict(rec)
+
+
+def _records_match(ctx: Ctx, label: str, records: list, ref: dict) -> None:
+    for s, toks in records:
+        if s not in ref or not np.array_equal(toks, ref[s]):
+            ctx.check(f"{label}: token-identical to uninterrupted run",
+                      False, f"step {s} diverged")
+            return
+    ctx.check(f"{label}: token-identical to uninterrupted run", True,
+              f"{len(records)} steps compared")
+
+
+def _debris(root: str) -> list[str]:
+    if not os.path.isdir(root):
+        return []
+    return [n for n in os.listdir(root)
+            if n.endswith(".tmp") or ".old." in n]
+
+
+def _final_dirs(root: str) -> list[str]:
+    return sorted(n for n in os.listdir(root) if _FINAL_RE.fullmatch(n))
+
+
+# --------------------------------------------------------------------------
+# checkpoint crash-consistency
+# --------------------------------------------------------------------------
+
+@scenario("fast", "ckpt")
+def kill_mid_checkpoint_resume(ctx: Ctx):
+    """SIGKILL during the checkpoint commit rename; the resumed run must
+    be token-identical to an uninterrupted one (the headline invariant)."""
+    manifest = _build_corpus(ctx.subdir("corpus"), ctx.rng)
+    total = 12
+    ref = _reference_tokens(manifest, total)
+    ckpt = ctx.subdir("ckpt")
+    rec1: list = []
+    tr = _recording_trainer(_stream(manifest), ckpt, total, rec1)
+    with hooks.installed("ckpt.pre_rename", hooks.crash_handler(nth=2)):
+        ctx.expect_crash("crash during 2nd checkpoint commit",
+                         lambda: tr.run(resume=False))
+    rec2: list = []
+    tr2 = _recording_trainer(_stream(manifest), ckpt, total, rec2)
+    tr2.run(resume=True)
+    ctx.check("resumed from the surviving checkpoint",
+              0 < tr2.start_step < total, f"start_step={tr2.start_step}")
+    _records_match(ctx, "pre-crash run", rec1, ref)
+    _records_match(ctx, "resumed run", rec2, ref)
+    covered = {s for s, _ in rec1} | {s for s, _ in rec2}
+    ctx.check("every step covered across crash+resume",
+              covered == set(range(total)), f"covered={sorted(covered)}")
+    ctx.check("final step reached", int(tr2.state["step"]) == total)
+    ctx.check("no debris after resume", not _debris(ckpt),
+              repr(_debris(ckpt)))
+
+
+@scenario("fast", "ckpt")
+def kill_mid_checkpoint_write(ctx: Ctx):
+    """SIGKILL while the checkpoint tmp dir is half-written: the debris
+    must never be mistaken for a checkpoint, and resume still works."""
+    manifest = _build_corpus(ctx.subdir("corpus"), ctx.rng)
+    total = 12
+    ref = _reference_tokens(manifest, total)
+    ckpt = ctx.subdir("ckpt")
+    rec1: list = []
+    tr = _recording_trainer(_stream(manifest), ckpt, total, rec1)
+    with hooks.installed("ckpt.pre_manifest", hooks.crash_handler(nth=2)):
+        ctx.expect_crash("crash mid-checkpoint-write",
+                         lambda: tr.run(resume=False))
+    ctx.check("half-written .tmp debris left by the kill",
+              any(n.endswith(".tmp") for n in os.listdir(ckpt)),
+              repr(os.listdir(ckpt)))
+    rec2: list = []
+    tr2 = _recording_trainer(_stream(manifest), ckpt, total, rec2)
+    tr2.run(resume=True)
+    ctx.check("resumed from the last COMPLETE checkpoint",
+              0 < tr2.start_step < total, f"start_step={tr2.start_step}")
+    _records_match(ctx, "resumed run", rec2, ref)
+    covered = {s for s, _ in rec1} | {s for s, _ in rec2}
+    ctx.check("every step covered across crash+resume",
+              covered == set(range(total)))
+    ctx.check("tmp debris cleaned on resume",
+              not any(n.endswith(".tmp") for n in os.listdir(ckpt)))
+
+
+@scenario("fast", "ckpt")
+def checkpoint_resave_crash_windows(ctx: Ctx):
+    """Re-saving over an existing step dir must be atomic in every crash
+    window: park-old -> rename-new -> cleanup (DESIGN.md §15)."""
+    from repro.train import checkpoint as ck
+    root = ctx.subdir("ckpt")
+
+    def st(v):
+        return {"w": np.full((4,), float(v), np.float32),
+                "step": np.int32(5)}
+
+    ck.save(root, 5, st(1))
+    ck.save(root, 5, st(2))
+    state, _ = ck.restore(root, st(0))
+    ctx.check("re-save atomically replaced the payload",
+              float(state["w"][0]) == 2.0)
+    ctx.check("no debris after clean re-save", not _debris(root))
+    with hooks.installed("ckpt.post_rename", hooks.crash_handler()):
+        ctx.expect_crash("crash after commit, before old-dir cleanup",
+                         lambda: ck.save(root, 5, st(3)))
+    ctx.check("parked .old dir left by the kill",
+              any(".old." in n for n in os.listdir(root)))
+    ctx.check("latest_step sees through the debris",
+              ck.latest_step(root) == 5)
+    state, _ = ck.restore(root, st(0))
+    ctx.check("restore returns the committed new payload",
+              float(state["w"][0]) == 3.0)
+    ctx.check("parked debris cleaned", not _debris(root))
+    # the other crash window: killed between park and commit -- only the
+    # parked old dir exists.  Recovery must roll it back, not lose step 5.
+    final = _final_dirs(root)[0]
+    os.rename(os.path.join(root, final),
+              os.path.join(root, final + ".old.99999"))
+    ctx.check("parked-only step is recovered", ck.latest_step(root) == 5)
+    state, _ = ck.restore(root, st(0))
+    ctx.check("rolled-back payload intact", float(state["w"][0]) == 3.0)
+    ctx.check("no debris after rollback", not _debris(root))
+
+
+@scenario("fast", "ckpt", "corruption")
+def checkpoint_corruption_fallback(ctx: Ctx):
+    """Byte-corrupted checkpoints are skipped (newest-first scan falls
+    back to an older intact one) or rejected with CheckpointError --
+    never silently half-restored."""
+    from repro.train import checkpoint as ck
+    root = ctx.subdir("ckpt")
+
+    def st(v):
+        return {"w": np.full((8,), float(v), np.float32),
+                "step": np.int32(v)}
+
+    ck.save(root, 2, st(2))
+    ck.save(root, 4, st(4))
+    npz = os.path.join(root, _final_dirs(root)[-1], "arrays.npz")
+    inject.corrupt_bytes(npz, ctx.rng, n_bytes=64)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        state, _ = ck.restore(root, st(0))
+    ctx.check("restore fell back to the older intact checkpoint",
+              int(state["step"]) == 2, f"step={int(state['step'])}")
+    ctx.check("fallback emitted a warning", len(w) >= 1)
+    try:
+        ck.restore(root, st(0), step=4)
+        ctx.check("explicitly requested corrupt step rejected", False)
+    except ck.CheckpointError:
+        ctx.check("explicitly requested corrupt step rejected", True)
+    inject.garbage_file(os.path.join(root, _final_dirs(root)[0],
+                                     "manifest.json"))
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ck.restore(root, st(0))
+        ctx.check("all-corrupt dir raises CheckpointError", False)
+    except ck.CheckpointError:
+        ctx.check("all-corrupt dir raises CheckpointError", True)
+
+
+# --------------------------------------------------------------------------
+# shard / data-pipeline faults
+# --------------------------------------------------------------------------
+
+@scenario("fast", "data")
+def shard_kill_mid_write(ctx: Ctx):
+    """SIGKILL mid-shard-write: the manifest-less directory is refused,
+    and a rewrite over the rubble yields a byte-exact corpus."""
+    from repro.data.shards import ShardReader, ShardWriter
+    docs = [ctx.rng.integers(1, 97, size=int(ctx.rng.integers(4, 40)))
+            for _ in range(24)]
+
+    def write(root, crash_point=None):
+        def go():
+            w = ShardWriter(root, vocab_size=97, shard_tokens=128)
+            for d in docs:
+                w.add_document(d)
+            return w.finalize()
+        if crash_point is None:
+            return go()
+        with hooks.installed(crash_point, hooks.crash_handler()):
+            ctx.expect_crash(f"crash at {crash_point}", go)
+        return None
+
+    write(ctx.subdir("kill_idx"), "shard.pre_idx")
+    write(ctx.subdir("kill_manifest"), "shard.pre_manifest")
+    for d in ("kill_idx", "kill_manifest"):
+        try:
+            ShardReader(ctx.subdir(d))
+            ctx.check(f"reader refuses manifest-less dir ({d})", False)
+        except (FileNotFoundError, ValueError):
+            ctx.check(f"reader refuses manifest-less dir ({d})", True)
+    manifest = write(ctx.subdir("kill_idx"))
+    r = ShardReader(manifest)
+    exact = (r.total_docs == len(docs) and
+             all(np.array_equal(r.doc(i), docs[i].astype(r.dtype))
+                 for i in range(len(docs))))
+    ctx.check("rewrite over the rubble is byte-exact", exact)
+
+
+@scenario("fast", "data", "corruption")
+def shard_corruption_rejected(ctx: Ctx):
+    """Truncated shard files and garbage manifests raise clean errors
+    instead of silently serving short/garbage documents."""
+    from repro.data.shards import ShardReader
+    m1 = _build_corpus(ctx.subdir("c1"), ctx.rng)
+    r = ShardReader(m1)
+    inject.truncate_file(os.path.join(r.root, r.shards[0]["file"]), 0.5)
+    try:
+        ShardReader(m1).doc(0)
+        ctx.check("truncated .bin rejected at map time", False)
+    except ValueError as e:
+        ctx.check("truncated .bin rejected at map time",
+                  "truncated or corrupt" in str(e), str(e))
+    m2 = _build_corpus(ctx.subdir("c2"), ctx.rng)
+    inject.garbage_file(m2)
+    try:
+        ShardReader(m2)
+        ctx.check("garbage manifest rejected with clean error", False)
+    except ValueError as e:
+        ctx.check("garbage manifest rejected with clean error",
+                  "corrupt" in str(e), str(e))
+
+
+@scenario("fast", "corruption")
+def autotune_cache_corruption(ctx: Ctx):
+    """A corrupt or foreign-version autotune cache must degrade to the
+    heuristic path with a warning, never crash kernel launch."""
+    from repro.kernels.autotune import CACHE_VERSION, AutotuneCache
+    path = os.path.join(ctx.workdir, "autotune.json")
+    cases = {
+        "garbage bytes": b"{]] not json",
+        "json list top-level": b"[1, 2, 3]",
+        "foreign version": json.dumps(
+            {"version": 999, "entries": {"x": [64, 64, 64]}}).encode(),
+        "malformed entries": json.dumps(
+            {"version": CACHE_VERSION,
+             "entries": {"a": [1, 2], "b": "?", 3: None}}).encode(),
+    }
+    for label, payload in cases.items():
+        with open(path, "wb") as f:
+            f.write(payload)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            cache = AutotuneCache(path)
+            val = cache.get("q4gemm", "cpu", 64, 64, 64)
+        ctx.check(f"{label}: warned and fell back to empty cache",
+                  len(w) >= 1 and val is None,
+                  f"warnings={len(w)} get={val!r}")
+    cache.put("q4gemm", "cpu", 64, 64, 64, (16, 16, 16))
+    reread = AutotuneCache(path).get("q4gemm", "cpu", 64, 64, 64)
+    ctx.check("cache rebuilt after corruption round-trips",
+              tuple(reread or ()) == (16, 16, 16), repr(reread))
+
+
+@scenario("fast", "data", "prefetch")
+def prefetch_stall_restart(ctx: Ctx):
+    """A wedged prefetch producer surfaces as TimeoutError; restart()
+    fences it off -- the stale generation can never leak a batch."""
+    from repro.data.packing import PackedBatch
+    from repro.data.prefetch import DevicePrefetcher
+
+    class GatedStream:
+        """Cursor advances before the (gated) slow part of the draw, so
+        reseeks aren't clobbered -- the fence is the thing under test."""
+
+        def __init__(self):
+            self.i = 0
+            self.gate = threading.Event()
+            self.gate.set()
+
+        def next_batch(self):
+            i = self.i
+            self.i = i + 1
+            self.gate.wait(20.0)
+            return PackedBatch({"tokens": np.full((1, 4), i, np.int32)},
+                               {"pack_frac": 1.0})
+
+        def state_dict(self):
+            return {"i": self.i}
+
+        def load_state_dict(self, s):
+            self.i = int(s["i"])
+
+    stream = GatedStream()
+    pf = DevicePrefetcher(stream, depth=1, stall_timeout=0.5,
+                          join_timeout=0.2)
+    first = pf.next_batch()
+    ctx.check("warm prefetcher serves",
+              int(first.arrays["tokens"][0, 0]) == 0)
+    stream.gate.clear()                    # wedge the producer mid-draw
+    try:
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            pf.next_batch()                # drain read-ahead, then stall
+        ctx.check("wedged producer surfaces as TimeoutError", False,
+                  "never timed out")
+    except TimeoutError:
+        ctx.check("wedged producer surfaces as TimeoutError", True)
+    pf.restart({"i": 100})                 # old producer still wedged
+    stream.gate.set()                      # release the zombie
+    got = [int(pf.next_batch().arrays["tokens"][0, 0]) for _ in range(4)]
+    ctx.check("no stale pre-restart batch leaked past the fence",
+              got == [100, 101, 102, 103], repr(got))
+    pf.stop()
+
+
+@scenario("fast", "data", "prefetch")
+def prefetch_producer_death(ctx: Ctx):
+    """A producer that dies (I/O error) surfaces to the consumer as a
+    clean RuntimeError carrying the cause -- not a hang, not silence."""
+    from repro.data.packing import PackedBatch
+    from repro.data.prefetch import DevicePrefetcher
+
+    class DyingStream:
+        def __init__(self):
+            self.i = 0
+
+        def next_batch(self):
+            if self.i >= 2:
+                raise OSError("disk vanished")
+            i = self.i
+            self.i += 1
+            return PackedBatch({"tokens": np.full((1, 4), i, np.int32)},
+                               {"pack_frac": 1.0})
+
+        def state_dict(self):
+            return {"i": self.i}
+
+        def load_state_dict(self, s):
+            self.i = int(s["i"])
+
+    pf = DevicePrefetcher(DyingStream(), depth=1, stall_timeout=2.0)
+    served = []
+    err = None
+    try:
+        for _ in range(5):
+            served.append(int(pf.next_batch().arrays["tokens"][0, 0]))
+    except RuntimeError as e:
+        err = e
+    ctx.check("good batches served before the death", served == [0, 1],
+              repr(served))
+    ctx.check("producer death surfaces as RuntimeError with cause",
+              err is not None and isinstance(err.__cause__, OSError),
+              repr(err))
+    pf.stop()
+
+
+# --------------------------------------------------------------------------
+# trainer-level stability faults
+# --------------------------------------------------------------------------
+
+@scenario("fast", "trainer")
+def nan_burst_skip_budget(ctx: Ctx):
+    """A NaN-loss burst within the skip budget is absorbed (updates
+    skipped, run completes); a burst past the budget aborts cleanly."""
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    def batch_fn(step):
+        return {"tokens": np.full((2, 8), step, np.int32)}
+
+    def make(max_skips):
+        def step_fn(state, batch):
+            s = int(state["step"])
+            return {"step": np.int32(s + 1)}, {"loss": np.float32(1.0)}
+        cfg = TrainerConfig(total_steps=10, max_nan_skips=max_skips,
+                            log_every=10_000)
+        return Trainer(step_fn, {"step": np.int32(0)}, batch_fn=batch_fn,
+                       cfg=cfg)
+
+    tr = make(5)
+    with hooks.installed("trainer.loss", inject.nan_loss_burst({3, 4, 5})):
+        hist = tr.run(resume=False)
+    skips = [h for h in hist if h.get("event") == "nan_skip"]
+    ctx.check("each NaN step skipped the update",
+              {h["step"] for h in skips} == {3, 4, 5}, repr(skips))
+    ctx.check("run completed within the budget",
+              hist[-1]["step"] == 9 and np.isfinite(hist[-1]["loss"]))
+    ctx.check("skipped updates were not applied",
+              int(tr.state["step"]) == 10 - 3,
+              f"state step={int(tr.state['step'])}")
+    tr2 = make(2)
+    with hooks.installed("trainer.loss",
+                         inject.nan_loss_burst(range(3, 9))):
+        try:
+            tr2.run(resume=False)
+            ctx.check("burst past the budget aborts", False)
+        except FloatingPointError:
+            ctx.check("burst past the budget aborts", True)
+
+
+@scenario("fast", "trainer", "sentinel")
+def sentinel_trip_bf16_fallback(ctx: Ctx):
+    """An injected activation-outlier burst trips the collapse sentinel:
+    update skipped, checkpoint written, bf16 fallback engaged, and the
+    loss recovers on the fallback arm (DESIGN.md §11/§15)."""
+    from repro.obs import SentinelConfig
+    from repro.train import checkpoint as ck
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    healthy_obs = {"agg/min_snr_db": np.float32(14.0),
+                   "agg/max_clamp_frac": np.float32(0.01)}
+
+    def primary(state, batch):
+        s = int(state["step"])
+        return ({"step": np.int32(s + 1)},
+                {"loss": np.float32(5.0), "obs": dict(healthy_obs)})
+
+    def fallback(state, batch):
+        s = int(state["step"])
+        return ({"step": np.int32(s + 1)},
+                {"loss": np.float32(1.0), "obs": dict(healthy_obs)})
+
+    ckpt = ctx.subdir("ckpt")
+    cfg = TrainerConfig(total_steps=10, ckpt_dir=ckpt, ckpt_every=100,
+                        log_every=10_000,
+                        sentinel=SentinelConfig(patience=2, warmup_steps=0))
+    tr = Trainer(primary, {"step": np.int32(0)},
+                 batch_fn=lambda s: {"x": np.zeros((1,), np.float32)},
+                 cfg=cfg, fallback_step_fn=fallback)
+    with hooks.installed("sentinel.obs",
+                         inject.outlier_obs_burst({2, 3})):
+        hist = tr.run(resume=False)
+    trips = [h for h in hist if h.get("event") == "collapse_trip"]
+    fb = [h for h in hist if h.get("event") == "bf16_fallback"]
+    ctx.check("sentinel tripped once, after `patience` bad steps",
+              len(trips) == 1 and trips[0]["step"] == 3, repr(trips))
+    ctx.check("bf16 fallback engaged", len(fb) == 1 and tr.fallback_active)
+    saved_steps = [int(n.split("_")[1]) for n in _final_dirs(ckpt)]
+    ctx.check("checkpoint written at the trip", 3 in saved_steps,
+              repr(saved_steps))
+    post = [h["loss"] for h in hist if "loss" in h and h["step"] > 3]
+    ctx.check("post-trip steps run the fallback arm (loss recovered)",
+              bool(post) and all(l == 1.0 for l in post), repr(post))
+    ctx.check("run completed (trip within NaN-skip budget)",
+              hist[-1]["step"] == 9)
+
+
+@scenario("fast", "trainer", "ckpt")
+def device_loss_rollback(ctx: Ctx):
+    """A step that raises (simulated device loss) rolls back to the last
+    checkpoint, reseeks the data stream, and replays token-identically."""
+    manifest = _build_corpus(ctx.subdir("corpus"), ctx.rng)
+    total = 10
+    ref = _reference_tokens(manifest, total)
+    rec: list = []
+    tr = _recording_trainer(_stream(manifest), ctx.subdir("ckpt"), total,
+                            rec, ckpt_every=3)
+    tr.fail_injector = inject.fail_step_once(5)
+    hist = tr.run(resume=False)
+    restored = [h for h in hist if h.get("event") == "restored"]
+    ctx.check("retry path restored from checkpoint once",
+              len(restored) == 1, repr(restored))
+    _records_match(ctx, "rollback replay", rec, ref)
+    ctx.check("every step covered despite the rollback",
+              {s for s, _ in rec} == set(range(total)))
+    ctx.check("final step reached", int(tr.state["step"]) == total)
+
+
+# --------------------------------------------------------------------------
+# full set: subprocess SIGKILL + real-model serve faults
+# --------------------------------------------------------------------------
+
+@scenario("full", "subprocess")
+def subprocess_kill_resume(ctx: Ctx):
+    """A real child process hard-killed (os._exit, SIGKILL-style) mid
+    checkpoint commit; rerunning the same command resumes and the merged
+    token stream matches an uninterrupted child bit-for-bit."""
+    corpus = ctx.subdir("corpus")
+    _build_corpus(corpus, ctx.rng)
+    total = 12
+
+    def child(ckpt, out, extra_env=None):
+        env = dict(os.environ,
+                   PYTHONPATH=os.pathsep.join(
+                       [p for p in (_src_path(),
+                                    os.environ.get("PYTHONPATH")) if p]))
+        env.update(extra_env or {})
+        return subprocess.run(
+            [sys.executable, "-m", "repro.chaos._child",
+             "--corpus", corpus, "--ckpt", ckpt,
+             "--total", str(total), "--out", out],
+            env=env, capture_output=True, text=True, timeout=600)
+
+    ref_out = os.path.join(ctx.workdir, "ref.json")
+    p = child(ctx.subdir("ckpt_ref"), ref_out)
+    ctx.check("reference child ran clean", p.returncode == 0,
+              p.stderr[-500:])
+    ckpt = ctx.subdir("ckpt")
+    out = os.path.join(ctx.workdir, "resumed.json")
+    p1 = child(ckpt, out, hooks.kill_env("ckpt.pre_rename", nth=2))
+    ctx.check("child hard-killed mid-commit (exit 137)",
+              p1.returncode == hooks.KILL_EXIT_CODE,
+              f"rc={p1.returncode} {p1.stderr[-300:]}")
+    ctx.check("killed child wrote no result", not os.path.exists(out))
+    p2 = child(ckpt, out)
+    ctx.check("resumed child ran clean", p2.returncode == 0,
+              p2.stderr[-500:])
+    if p.returncode == 0 and p2.returncode == 0:
+        ref = {r["step"]: r["crc"] for r in json.load(open(ref_out))}
+        res = json.load(open(out))
+        ctx.check("resume started mid-run",
+                  0 < min(r["step"] for r in res) < total)
+        ctx.check("resumed stream token-identical to uninterrupted child",
+                  all(ref.get(r["step"]) == r["crc"] for r in res),
+                  f"{len(res)} steps compared")
+        ctx.check("resumed child reached the final step",
+                  max(r["step"] for r in res) == total - 1)
+    ctx.check("no debris after resume", not _debris(ckpt),
+              repr(_debris(ckpt)))
+
+
+@scenario("full", "serve")
+def serve_cancel_storm(ctx: Ctx):
+    """Seeded cancels injected mid-decode via the serve.pre_step seam:
+    the engine must drain, free every page, and finish every
+    non-cancelled request (DESIGN.md §13/§15)."""
+    import jax
+    from repro.configs import get_config
+    from repro.core.policy import BF16
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("llama2-400m", smoke=True).replace(
+        cache_dtype="float32", remat=False)
+    model = build_model(cfg, BF16.replace(compute="float32"))
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, n_slots=4, max_len=48,
+                      prefill_len=16, page_size=4)
+    free0 = eng.allocator.available
+    prompts = [ctx.rng.integers(1, cfg.vocab_size,
+                                size=int(ctx.rng.integers(3, 14))).tolist()
+               for _ in range(6)]
+    rids = [eng.submit(p, 8) for p in prompts]
+    victims = {rids[1], rids[4]}
+    cancel_at = {int(ctx.rng.integers(1, 5)): rids[1],
+                 int(ctx.rng.integers(5, 10)): rids[4]}
+
+    def chaos_cancel(value, engine=None, step=None, **kw):
+        rid = cancel_at.pop(step, None)
+        if rid is not None:
+            engine.cancel(rid)
+        return value
+
+    with hooks.installed("serve.pre_step", chaos_cancel):
+        res = eng.run()
+    eng.check_invariants()
+    ctx.check("engine drained under the cancel storm", not eng.busy)
+    survivors = [r for r in rids if r not in victims]
+    ctx.check("every non-cancelled request finished",
+              all(res[r]["state"] == "done" for r in survivors),
+              repr({r: res[r]["state"] for r in rids}))
+    ctx.check("every non-cancelled request got all its tokens",
+              all(len(res[r]["tokens"]) == 8 for r in survivors))
+    ctx.check("all KV pages freed after drain",
+              eng.allocator.available == free0,
+              f"{eng.allocator.available}/{free0}")
+
+
+def _src_path() -> str:
+    """Repo `src/` dir (so subprocess children can import repro)."""
+    return os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+# --------------------------------------------------------------------------
+# runner
+# --------------------------------------------------------------------------
+
+def run_scenarios(selector: str = "fast", seed: int = 0,
+                  journal: str | None = None, keep_work: bool = False,
+                  echo: Callable[[str], None] = print
+                  ) -> list[ScenarioResult]:
+    """Run the selected scenarios under a seeded schedule.
+
+    Each scenario gets a fresh scratch dir and a clean handler registry;
+    results (and per-check details) go to `journal` as JSONL when given.
+    """
+    selected = names(selector)
+    base = tempfile.mkdtemp(prefix="repro-chaos-")
+    results: list[ScenarioResult] = []
+    try:
+        for name in selected:
+            fn, _ = _REGISTRY[name]
+            ctx = Ctx(name, seed, os.path.join(base, name))
+            os.makedirs(ctx.workdir, exist_ok=True)
+            hooks.clear()
+            t0 = time.perf_counter()
+            error = None
+            try:
+                fn(ctx)
+            except hooks.SimulatedCrash:
+                error = ("SimulatedCrash escaped the scenario "
+                         "(missing expect_crash guard)")
+            except Exception:  # noqa: BLE001 - reported per scenario
+                error = traceback.format_exc(limit=8)
+            finally:
+                hooks.clear()
+            dt = time.perf_counter() - t0
+            ok = (error is None and bool(ctx.checks)
+                  and all(c.ok for c in ctx.checks))
+            results.append(ScenarioResult(name, seed, ok, dt,
+                                          ctx.checks, error))
+            n_ok = sum(c.ok for c in ctx.checks)
+            echo(f"[chaos] {'PASS' if ok else 'FAIL'} {name:36s} "
+                 f"{n_ok}/{len(ctx.checks)} checks  {dt:.2f}s")
+            if not ok:
+                for c in ctx.checks:
+                    if not c.ok:
+                        echo(f"[chaos]   FAILED CHECK: {c.name}"
+                             f"{'  -- ' + c.detail if c.detail else ''}")
+                if error:
+                    echo(f"[chaos]   ERROR: {error.strip().splitlines()[-1]}")
+    finally:
+        if not keep_work:
+            shutil.rmtree(base, ignore_errors=True)
+        else:
+            echo(f"[chaos] scratch kept at {base}")
+    if journal:
+        os.makedirs(os.path.dirname(os.path.abspath(journal)), exist_ok=True)
+        with open(journal, "w") as f:
+            for r in results:
+                f.write(json.dumps(r.to_record()) + "\n")
+            f.write(json.dumps({
+                "summary": True, "selector": selector, "seed": seed,
+                "n_scenarios": len(results),
+                "n_passed": sum(r.ok for r in results)}) + "\n")
+    return results

@@ -14,6 +14,16 @@ replays exactly the batches the trainer did not see. `restart(state)`
 flushes the queue and reseeks the underlying stream (used by the
 trainer's failure-recovery path).
 
+Restart is fenced by a generation counter (DESIGN.md §15): each producer
+thread owns its generation's queue and stop event, created fresh per
+(re)start.  A producer stuck in a slow `stream.next_batch()` when
+`restart` times out its join can therefore never push a stale batch --
+or a phantom error -- into the new generation: it only holds references
+to its own, now-orphaned, queue/event, and exits at its next stop check.
+(The stuck call itself still holds the old stream position in its stack;
+the reseek happens regardless, and the fence guarantees nothing it
+produces escapes.)
+
 Health counters (`stats()`, reset per call) feed `repro.obs` records:
 stall_ms (consumer time blocked waiting on the queue), queue_depth
 (occupancy when the consumer arrived), pack_frac (mean packing
@@ -25,6 +35,8 @@ import queue
 import threading
 import time
 
+from repro.chaos.hooks import chaos_point
+
 from .packing import PackedBatch
 
 
@@ -33,15 +45,22 @@ class DevicePrefetcher:
 
     `stream` must expose next_batch()/state_dict()/load_state_dict()
     (PackedStream, SyntheticStream). `place_fn(arrays) -> arrays` stages a
-    host batch onto devices; identity by default.
+    host batch onto devices; identity by default.  `stall_timeout` bounds
+    the consumer's wait on an empty queue (a wedged producer surfaces as
+    TimeoutError, not a hang); `join_timeout` bounds how long restart/stop
+    wait for the producer thread before fencing it off.
     """
 
-    def __init__(self, stream, place_fn=None, depth: int = 2):
+    def __init__(self, stream, place_fn=None, depth: int = 2,
+                 stall_timeout: float = 60.0, join_timeout: float = 5.0):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self.stream = stream
         self.place_fn = place_fn or (lambda arrays: arrays)
         self.depth = depth
+        self.stall_timeout = stall_timeout
+        self.join_timeout = join_timeout
+        self._gen = 0
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -58,37 +77,53 @@ class DevicePrefetcher:
 
     # ---------------------------------------------------------- producer
     def _start(self):
-        self._stop.clear()
-        self._thread = threading.Thread(target=self._produce, daemon=True)
+        # fresh queue + stop event per generation: an old producer that
+        # outlived its join timeout holds only its own generation's
+        # objects and can never touch these
+        self._gen += 1
+        self._q = queue.Queue(maxsize=self.depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._produce, args=(self._gen, self._q, self._stop),
+            daemon=True)
         self._thread.start()
 
-    def _produce(self):
+    def _produce(self, gen: int, q: queue.Queue, stop: threading.Event):
         try:
-            while not self._stop.is_set():
+            while not stop.is_set():
+                chaos_point("prefetch.tick", gen=gen)
                 batch = self.stream.next_batch()
                 state = self.stream.state_dict()
-                while not self._stop.is_set():
+                while not stop.is_set():
                     try:
-                        self._q.put((batch, state), timeout=0.05)
+                        q.put((batch, state), timeout=0.05)
                         break
                     except queue.Full:
                         continue
         except BaseException as e:  # noqa: BLE001 - surfaced to consumer
-            self._error = e
-            self._stop.set()
+            if gen == self._gen:        # stale generations report nothing
+                self._error = e
+            stop.set()
 
     def _pop(self, block: bool) -> tuple[PackedBatch, dict] | None:
+        # Drain residual good batches before surfacing a producer death:
+        # the error concerns batches the producer could NOT draw, so ones
+        # it already queued are still valid (and checkpoint-consistent).
+        try:
+            return self._q.get_nowait()
+        except queue.Empty:
+            pass
+        if not block:
+            return None            # opportunistic staging pop never raises
         if self._error is not None:
             raise RuntimeError("prefetch producer died") from self._error
         try:
-            return self._q.get(timeout=60.0) if block else \
-                self._q.get_nowait()
+            return self._q.get(timeout=self.stall_timeout)
         except queue.Empty:
             if self._error is not None:
                 raise RuntimeError("prefetch producer died") from self._error
-            if block:
-                raise TimeoutError("prefetch producer stalled > 60s")
-            return None
+            raise TimeoutError(f"prefetch producer stalled > "
+                               f"{self.stall_timeout}s")
 
     # ---------------------------------------------------------- consumer
     def next_batch(self) -> PackedBatch:
@@ -123,14 +158,17 @@ class DevicePrefetcher:
         self.restart(state)
 
     def restart(self, state: dict) -> None:
-        """Flush read-ahead and reseek the stream to `state`."""
+        """Flush read-ahead and reseek the stream to `state`.
+
+        A producer stuck past `join_timeout` is abandoned behind the
+        generation fence rather than waited on forever (it exits on its
+        own at its next stop-event check)."""
         self.stop()
         self.stream.load_state_dict(state)
         self._consumed_state = self.stream.state_dict()
         self._staged = None
         self._staged_state = None
         self._error = None
-        self._q = queue.Queue(maxsize=self.depth)
         self._start()
 
     def stats(self) -> dict:
@@ -146,8 +184,8 @@ class DevicePrefetcher:
         return out
 
     def stop(self) -> None:
-        """Stop the producer thread (idempotent)."""
+        """Stop the producer thread (idempotent; bounded wait)."""
         self._stop.set()
         if self._thread is not None:
-            self._thread.join(timeout=5.0)
+            self._thread.join(timeout=self.join_timeout)
             self._thread = None

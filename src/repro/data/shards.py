@@ -15,7 +15,13 @@ RAM. Token dtype is ``uint16`` when ``vocab_size <= 65536`` else
 ``uint32``; document boundaries come only from the index file.
 
 Writers are atomic at the manifest level: shards are written first and
-``manifest.json`` last, so a directory with a manifest is always complete.
+``manifest.json`` last (fsynced tmp + atomic rename), so a directory
+with a manifest is always complete; a kill mid-write leaves a
+manifest-less directory that readers refuse.  Readers validate what they
+open (DESIGN.md §15): a corrupt manifest raises a clean ``ValueError``,
+and ``.bin``/``.idx`` files whose sizes disagree with the manifest --
+the on-disk shape of truncation or a mixed-up directory -- are rejected
+at map time instead of silently serving short or garbage documents.
 """
 from __future__ import annotations
 
@@ -24,6 +30,8 @@ import json
 import os
 
 import numpy as np
+
+from repro.chaos.hooks import chaos_point
 
 FORMAT_NAME = "repro-shards-v1"
 _IDX_DTYPE = np.int64
@@ -76,6 +84,7 @@ class ShardWriter:
         if self._bin is None:
             return
         self._bin.close()
+        chaos_point("shard.pre_idx", shard=self._bin_name)
         np.asarray(self._offsets, _IDX_DTYPE).tofile(
             os.path.join(self.root, self._idx_name))
         self.shards.append(ShardInfo(self._bin_name, self._idx_name,
@@ -113,9 +122,12 @@ class ShardWriter:
             "meta": meta or {},
         }
         path = os.path.join(self.root, "manifest.json")
+        chaos_point("shard.pre_manifest", path=path)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
         return path
 
@@ -132,11 +144,23 @@ class ShardReader:
         if os.path.isdir(manifest_path):
             manifest_path = os.path.join(manifest_path, "manifest.json")
         with open(manifest_path) as f:
-            self.manifest = json.load(f)
+            try:
+                self.manifest = json.load(f)
+            except ValueError as e:
+                raise ValueError(f"corrupt shard manifest "
+                                 f"{manifest_path}: {e}") from e
+        if not isinstance(self.manifest, dict):
+            raise ValueError(f"corrupt shard manifest {manifest_path}: "
+                             "top level is not an object")
         if self.manifest.get("format") != FORMAT_NAME:
             raise ValueError(
                 f"unsupported shard format {self.manifest.get('format')!r}"
                 f" (expected {FORMAT_NAME})")
+        missing = {"dtype", "vocab_size", "shards",
+                   "total_tokens"} - self.manifest.keys()
+        if missing:
+            raise ValueError(f"corrupt shard manifest {manifest_path}: "
+                             f"missing keys {sorted(missing)}")
         self.root = os.path.dirname(os.path.abspath(manifest_path))
         self.dtype = np.dtype(self.manifest["dtype"])
         self.vocab_size = int(self.manifest["vocab_size"])
@@ -150,10 +174,22 @@ class ShardReader:
     def _shard_maps(self, si: int):
         if si not in self._maps:
             s = self.shards[si]
-            toks = np.memmap(os.path.join(self.root, s["file"]),
-                             dtype=self.dtype, mode="r")
-            idx = np.memmap(os.path.join(self.root, s["idx"]),
-                            dtype=_IDX_DTYPE, mode="r")
+            bin_path = os.path.join(self.root, s["file"])
+            idx_path = os.path.join(self.root, s["idx"])
+            # size check before mapping: a truncated file would otherwise
+            # serve short/empty documents silently (memmap slices past
+            # the end clip instead of raising)
+            want_bin = s["n_tokens"] * self.dtype.itemsize
+            want_idx = (s["n_docs"] + 1) * np.dtype(_IDX_DTYPE).itemsize
+            got_bin = os.path.getsize(bin_path)
+            got_idx = os.path.getsize(idx_path)
+            if got_bin != want_bin or got_idx != want_idx:
+                raise ValueError(
+                    f"shard {s['file']} truncated or corrupt: "
+                    f"bin {got_bin}B (manifest says {want_bin}B), "
+                    f"idx {got_idx}B (manifest says {want_idx}B)")
+            toks = np.memmap(bin_path, dtype=self.dtype, mode="r")
+            idx = np.memmap(idx_path, dtype=_IDX_DTYPE, mode="r")
             self._maps[si] = (toks, idx)
         return self._maps[si]
 

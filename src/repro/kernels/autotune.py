@@ -25,7 +25,10 @@ import json
 import os
 import threading
 import time
+import warnings
 from typing import Callable, Iterable
+
+CACHE_VERSION = 1
 
 # Heuristic defaults per op (clipped to the actual dims at lookup time).
 # 128 is the MXU edge; bk larger than bm/bn amortizes the accumulator
@@ -77,21 +80,61 @@ class AutotuneCache:
 
     def _load(self) -> dict[str, list[int]]:
         if self._entries is None:
-            try:
-                with open(self.path) as f:
-                    data = json.load(f)
-                self._entries = dict(data.get("entries", {}))
-            except (OSError, ValueError):
-                self._entries = {}
+            self._entries = self._read_validated()
         return self._entries
+
+    def _read_validated(self) -> dict[str, list[int]]:
+        """Parse + schema-check the cache file; empty dict on any damage.
+
+        A corrupt or foreign-version cache must never take training down
+        (DESIGN.md §15) -- the heuristic defaults are always a safe
+        fallback, so every damage mode degrades to a cold cache with one
+        warning: unreadable file, non-JSON bytes, a JSON value that is
+        not our schema (top-level non-dict, wrong version, entries that
+        are not 3-vectors of positive ints).
+        """
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except FileNotFoundError:
+            return {}
+        except (OSError, ValueError) as e:
+            self._warn(f"unreadable autotune cache ({e})")
+            return {}
+        if not isinstance(data, dict):
+            self._warn(f"autotune cache is not an object "
+                       f"(got {type(data).__name__})")
+            return {}
+        if data.get("version") != CACHE_VERSION:
+            self._warn(f"autotune cache version {data.get('version')!r} "
+                       f"!= {CACHE_VERSION}")
+            return {}
+        entries = data.get("entries")
+        if not isinstance(entries, dict):
+            self._warn("autotune cache has no entries dict")
+            return {}
+        good, bad = {}, 0
+        for k, v in entries.items():
+            if (isinstance(k, str) and isinstance(v, list) and len(v) == 3
+                    and all(isinstance(b, int) and b > 0 for b in v)):
+                good[k] = v
+            else:
+                bad += 1
+        if bad:
+            self._warn(f"dropped {bad} malformed autotune entries")
+        return good
+
+    def _warn(self, why: str) -> None:
+        warnings.warn(f"{why}; starting with an empty autotune cache "
+                      f"[{self.path}]", stacklevel=3)
 
     def _save(self) -> None:
         path = self.path
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump({"version": 1, "entries": self._entries}, f,
-                      indent=1, sort_keys=True)
+            json.dump({"version": CACHE_VERSION, "entries": self._entries},
+                      f, indent=1, sort_keys=True)
         os.replace(tmp, path)
 
     def get(self, op: str, backend: str, m: int, n: int,

@@ -24,6 +24,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro.chaos.hooks import chaos_point
+
 
 @dataclasses.dataclass(frozen=True)
 class SentinelConfig:
@@ -81,6 +83,9 @@ class CollapseSentinel:
         return reasons
 
     def observe(self, step: int, obs: dict) -> SentinelDecision:
+        # chaos seam: scenario injectors overwrite the health record here
+        # to exercise trip -> checkpoint -> bf16-fallback (DESIGN.md §15)
+        obs = chaos_point("sentinel.obs", obs, step=step)
         self.n_obs += 1
         if self.n_obs <= self.cfg.warmup_steps:
             return SentinelDecision(False, step, [], 0)

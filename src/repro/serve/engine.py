@@ -28,6 +28,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import obs
+from repro.chaos.hooks import chaos_point
 from repro.dist import sharding as shard_rules
 
 from .paged_cache import PageAllocator, PageTable, pages_needed
@@ -349,6 +350,9 @@ class ServeEngine:
     def step(self) -> None:
         """One engine iteration: timeout eviction, admission (+prefill of
         newly placed requests), then one batched decode step."""
+        # chaos seam: scenario handlers get the live engine to cancel
+        # requests / kill slots mid-flight (DESIGN.md §15)
+        chaos_point("serve.pre_step", engine=self, step=self.step_count)
         for req in self.sched.timed_out():
             self._evict(req, "timeout")
         self._admit()

@@ -1,4 +1,4 @@
-"""Checkpointing: atomic, mesh-independent, resume-exact.
+"""Checkpointing: atomic, durable, mesh-independent, resume-exact.
 
 Layout (one directory per step):
     <root>/step_000123.tmp/...   (write)
@@ -12,6 +12,17 @@ Mesh independence: leaves are saved as *full* logical arrays, so restoring
 onto any mesh shape is a plain device_put with the new sharding
 (train/elastic.py). For 1000+-node scale the same layout shards the npz per
 host; the manifest already records per-leaf byte ranges to support that.
+
+Crash consistency (DESIGN.md §15): files are fsynced before the commit
+rename and the parent directory after it, so a kill at any point leaves
+either the old or the new checkpoint fully on disk.  Re-saving an
+existing step (sentinel-trip rollback, resumed runs) never deletes the
+target before the replacement is ready: the old directory is parked at
+``step_N.old.<pid>`` for the duration of the swap, and ``clean_debris``
+(run by every save/restore) renames it back if a crash struck between
+the two renames.  Corrupt checkpoints raise ``CheckpointError``;
+``restore(step=None)`` falls back to the newest *restorable* step
+instead of crashing on -- or silently reusing -- damaged artifacts.
 """
 from __future__ import annotations
 
@@ -20,17 +31,57 @@ import json
 import os
 import re
 import shutil
-import tempfile
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.chaos.hooks import chaos_point
 from repro.dist import compat
 
 _FP8_DTYPES = {"float8_e4m3fn": jnp.float8_e4m3fn,
                "float8_e5m2": jnp.float8_e5m2}
+
+_STEP_RE = re.compile(r"step_(\d+)")
+_OLD_RE = re.compile(r"(step_\d+)\.old\.\d+")
+
+
+class CheckpointError(ValueError):
+    """A checkpoint on disk is damaged (truncated, corrupted, unreadable)."""
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory so a kill after return cannot lose it."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def clean_debris(root: str) -> None:
+    """Remove half-written save attempts; finish interrupted re-saves.
+
+    ``step_N.tmp`` dirs are incomplete writes -- deleted.  A
+    ``step_N.old.<pid>`` dir whose ``step_N`` is missing means the save
+    died between parking the old checkpoint and committing the new one:
+    the parked copy is renamed back (it is complete by construction).
+    """
+    if not os.path.isdir(root):
+        return
+    for d in os.listdir(root):
+        p = os.path.join(root, d)
+        m = _OLD_RE.fullmatch(d)
+        if m:
+            final = os.path.join(root, m.group(1))
+            if os.path.exists(final):
+                shutil.rmtree(p, ignore_errors=True)
+            else:
+                os.rename(p, final)
+        elif d.endswith(".tmp") and _STEP_RE.fullmatch(d[:-4]):
+            shutil.rmtree(p, ignore_errors=True)
 
 
 def _flatten_with_paths(tree):
@@ -48,12 +99,17 @@ def tree_hash(tree) -> str:
 
 
 def save(root: str, step: int, state, extra: dict | None = None) -> str:
-    """Atomic checkpoint write. Returns final directory path."""
+    """Atomic, durable checkpoint write. Returns final directory path.
+
+    Safe against a kill at any point, including while replacing an
+    existing ``step_N`` (see module docstring for the commit protocol).
+    """
     final = os.path.join(root, f"step_{step:08d}")
     tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    os.makedirs(root, exist_ok=True)
+    clean_debris(root)
     os.makedirs(tmp, exist_ok=True)
+    chaos_point("ckpt.pre_arrays", path=tmp, step=step)
 
     paths, leaves, _ = _flatten_with_paths(state)
     arrays, dtypes = {}, {}
@@ -65,7 +121,10 @@ def save(root: str, step: int, state, extra: dict | None = None) -> str:
             dtypes[key] = arr.dtype.name
             arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
         arrays[key] = arr
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arrays_path, **arrays)
+    _fsync_path(arrays_path)
+    chaos_point("ckpt.pre_manifest", path=tmp, step=step)
     manifest = {
         "step": step,
         "paths": paths,
@@ -73,34 +132,51 @@ def save(root: str, step: int, state, extra: dict | None = None) -> str:
         "tree_hash": tree_hash(state),
         "extra": extra or {},
     }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    manifest_path = os.path.join(tmp, "manifest.json")
+    with open(manifest_path, "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
+    chaos_point("ckpt.pre_rename", path=tmp, step=step)
+    # Commit: never a window with step_N absent *and* unrecoverable --
+    # the old dir is parked (atomic rename), the tmp promoted (atomic
+    # rename), and clean_debris un-parks the old one after a crash
+    # between the two.
+    old = None
     if os.path.exists(final):
-        shutil.rmtree(final)
+        old = f"{final}.old.{os.getpid()}"
+        os.rename(final, old)
     os.rename(tmp, final)
+    _fsync_path(root)             # make both renames durable
+    chaos_point("ckpt.post_rename", path=final, step=step)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
     return final
 
 
 def latest_step(root: str) -> int | None:
     if not os.path.isdir(root):
         return None
+    clean_debris(root)       # an interrupted re-save must still count
     steps = [int(m.group(1)) for d in os.listdir(root)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
+             if (m := _STEP_RE.fullmatch(d))]
     return max(steps) if steps else None
 
 
-def restore(root: str, state_template, step: int | None = None,
-            shardings=None):
-    """Restore into the structure of `state_template`. With `shardings`,
-    leaves are device_put with the given sharding (elastic resharding)."""
-    if step is None:
-        step = latest_step(root)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {root}")
-    d = os.path.join(root, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
+def _restore_dir(d: str, state_template, shardings):
+    """Load one checkpoint directory; CheckpointError on damage."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        if not isinstance(manifest, dict) or "paths" not in manifest:
+            raise CheckpointError(f"manifest under {d} is not a checkpoint "
+                                  "manifest")
+    except CheckpointError:
+        raise
+    except (OSError, ValueError) as e:
+        raise CheckpointError(f"corrupt checkpoint manifest under {d}: "
+                              f"{e}") from e
 
     tmpl_paths, tmpl_leaves, treedef = _flatten_with_paths(state_template)
     if manifest["paths"] != tmpl_paths:
@@ -113,17 +189,56 @@ def restore(root: str, state_template, step: int | None = None,
     _BITS = {"float8_e4m3fn": ml_dtypes.float8_e4m3fn,
              "float8_e5m2": ml_dtypes.float8_e5m2,
              "bfloat16": ml_dtypes.bfloat16}
-    out = []
-    for i, (tmpl, sh) in enumerate(zip(tmpl_leaves, shard_leaves)):
-        arr = data[f"leaf_{i:05d}"]
-        special = manifest["special_dtypes"].get(f"leaf_{i:05d}")
-        if special:
-            arr = arr.view(_BITS[special])
-        if sh is not None:
-            out.append(jax.device_put(arr, sh))
-        else:
-            out.append(jnp.asarray(arr))
+    # Materialize every leaf on the host inside the guard: a flipped bit
+    # in the npz surfaces as BadZipFile/zlib error/KeyError at member
+    # access time, not at np.load.
+    try:
+        data = np.load(os.path.join(d, "arrays.npz"))
+        host = []
+        for i in range(len(tmpl_leaves)):
+            arr = data[f"leaf_{i:05d}"]
+            special = manifest["special_dtypes"].get(f"leaf_{i:05d}")
+            if special:
+                arr = arr.view(_BITS[special])
+            host.append(arr)
+    except Exception as e:  # noqa: BLE001 -- zip/zlib/npy-format/OS damage
+        raise CheckpointError(f"corrupt checkpoint arrays under {d}: "
+                              f"{e}") from e
+    out = [jax.device_put(a, sh) if sh is not None else jnp.asarray(a)
+           for a, sh in zip(host, shard_leaves)]
     return treedef.unflatten(out), manifest
+
+
+def restore(root: str, state_template, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of `state_template`. With `shardings`,
+    leaves are device_put with the given sharding (elastic resharding).
+
+    With an explicit `step`, damage raises `CheckpointError`.  With
+    `step=None` the newest *restorable* checkpoint wins: corrupt ones
+    are skipped with a warning, and only if every candidate is damaged
+    does the call raise -- never a silent fresh start, never a crash on
+    a single bad artifact.
+    """
+    if step is not None:
+        return _restore_dir(os.path.join(root, f"step_{step:08d}"),
+                            state_template, shardings)
+    if not os.path.isdir(root):
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    clean_debris(root)
+    steps = sorted((int(m.group(1)) for d in os.listdir(root)
+                    if (m := _STEP_RE.fullmatch(d))), reverse=True)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    for s in steps:
+        d = os.path.join(root, f"step_{s:08d}")
+        try:
+            return _restore_dir(d, state_template, shardings)
+        except CheckpointError as e:
+            warnings.warn(f"skipping corrupt checkpoint {d}: {e}",
+                          stacklevel=2)
+    raise CheckpointError(f"no restorable checkpoint under {root} "
+                          f"({len(steps)} candidates, all corrupt)")
 
 
 def keep_last(root: str, n: int = 3) -> None:
@@ -131,6 +246,6 @@ def keep_last(root: str, n: int = 3) -> None:
     if not os.path.isdir(root):
         return
     steps = sorted(int(m.group(1)) for d in os.listdir(root)
-                   if (m := re.fullmatch(r"step_(\d+)", d)))
+                   if (m := _STEP_RE.fullmatch(d)))
     for s in steps[:-n]:
         shutil.rmtree(os.path.join(root, f"step_{s:08d}"), ignore_errors=True)

@@ -46,9 +46,16 @@ def state_shardings(state, axes, mesh):
     }
 
 
-def _loss_grads(model, params, batch, clip_norm, microbatch: int = 1):
-    """Gradients with optional microbatch accumulation (activation peak
-    divides by `microbatch`; grads/optimizer memory unchanged)."""
+def _loss_grads(model, params, batch, microbatch: int = 1):
+    """Loss, metrics, and *unclipped* gradients, with optional microbatch
+    accumulation (activation peak divides by `microbatch`; grads/optimizer
+    memory unchanged).
+
+    Clipping is the caller's job, applied only after ALL gradient
+    accumulation (microbatches here, cross-pod sync in the hier step) so
+    both the clip decision and the reported `grad_norm` see the true norm
+    of the accumulated gradient -- never a mean of per-shard norms.
+    """
     if microbatch <= 1:
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: model.loss(p, batch), has_aux=True)(params)
@@ -81,9 +88,7 @@ def _loss_grads(model, params, batch, clip_norm, microbatch: int = 1):
             grads = jax.tree.map(
                 lambda a, gg: a + gg.astype(jnp.bfloat16) / microbatch,
                 grads, g)
-    grads, gnorm = adam_mod.clip_by_global_norm(grads, clip_norm)
-    metrics = dict(metrics, grad_norm=gnorm, loss=loss)
-    return loss, metrics, grads
+    return loss, dict(metrics, loss=loss), grads
 
 
 def make_train_step(model, mesh, *, adam_cfg=None, total_steps: int = 10000,
@@ -93,7 +98,9 @@ def make_train_step(model, mesh, *, adam_cfg=None, total_steps: int = 10000,
 
     def train_step(state, batch):
         loss, metrics, grads = _loss_grads(model, state["params"], batch,
-                                           clip_norm, microbatch)
+                                           microbatch)
+        grads, gnorm = adam_mod.clip_by_global_norm(grads, clip_norm)
+        metrics = dict(metrics, grad_norm=gnorm)
         lr = warmup_cosine(state["step"], total_steps=total_steps,
                            peak_lr=peak_lr)
         params, opt = adam_mod.apply_update(state["params"], grads,
@@ -114,22 +121,28 @@ def make_hier_train_step(model, mesh, *, adam_cfg=None,
     """
     adam_cfg = adam_cfg or adam_mod.AdamConfig()
     assert "pod" in mesh.axis_names
-    if getattr(model.policy, "obs_metrics", False):
-        # The shard_map out_specs below are a fixed metrics template; the
-        # obs tree's keys are model-dependent. Collect health metrics with
-        # the single-pod step (the observability configuration) instead.
-        raise NotImplementedError(
-            "policy.obs_metrics is not supported by make_hier_train_step; "
-            "use make_train_step for instrumented runs (DESIGN.md §11)")
+    npod = mesh.shape["pod"]
 
-    def per_pod(state, batch):
-        loss, metrics, grads = _loss_grads(model, state["params"], batch,
-                                           clip_norm)
-        if compress:
-            grads = grad_comm.fp8_allreduce_mean(grads, "pod")
-        else:
-            grads = grad_comm.bf16_allreduce_mean(grads, "pod")
-        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+    def _per_pod(state, batch, comm: bool):
+        # `comm=False` is the collective-free twin used only under
+        # jax.eval_shape to derive the output pytree (pmean/allreduce
+        # and clipping preserve structure, shape, and dtype exactly, so
+        # both arms emit identical templates) -- eval_shape cannot trace
+        # collectives outside the shard_map axis context.
+        loss, metrics, grads = _loss_grads(model, state["params"], batch)
+        if comm:
+            if compress:
+                grads = grad_comm.fp8_allreduce_mean(grads, "pod")
+            else:
+                grads = grad_comm.bf16_allreduce_mean(grads, "pod")
+        # clip AFTER the cross-pod sync: the clip decision and the
+        # reported grad_norm are the true norm of the accumulated
+        # (pod-mean) gradient, not a mean of per-pod norms.
+        grads, gnorm = adam_mod.clip_by_global_norm(grads, clip_norm)
+        if comm:
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"),
+                                   metrics)
+        metrics = dict(metrics, grad_norm=gnorm)
         lr = warmup_cosine(state["step"], total_steps=total_steps,
                            peak_lr=peak_lr)
         params, opt = adam_mod.apply_update(state["params"], grads,
@@ -137,12 +150,30 @@ def make_hier_train_step(model, mesh, *, adam_cfg=None,
         new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
         return new_state, metrics
 
+    per_pod = functools.partial(_per_pod, comm=True)
+    template_cache: dict[Any, Any] = {}
+
+    def _out_template(state, batch):
+        """Abstract (new_state, metrics) pytree of one pod's step, via
+        jax.eval_shape on the collective-free twin -- no fixed metrics
+        dict, so models emitting extra keys (aux stats, metrics["obs"])
+        shard_map cleanly."""
+        flat, treedef = jax.tree.flatten((state, batch))
+        key = (treedef, tuple((tuple(x.shape), str(x.dtype)) for x in flat))
+        if key not in template_cache:
+            def shrink(x):
+                assert x.shape[0] % npod == 0, (x.shape, npod)
+                return jax.ShapeDtypeStruct(
+                    (x.shape[0] // npod,) + tuple(x.shape[1:]), x.dtype)
+            template_cache[key] = jax.eval_shape(
+                functools.partial(_per_pod, comm=False),
+                state, jax.tree.map(shrink, batch))
+        return template_cache[key]
+
     def train_step(state, batch):
         batch_specs = jax.tree.map(lambda _: P("pod"), batch)
         state_specs = jax.tree.map(lambda _: P(), state)
-        out_specs = (state_specs, jax.tree.map(lambda _: P(),
-                                               {"lm_loss": 0, "aux_loss": 0,
-                                                "grad_norm": 0, "loss": 0}))
+        out_specs = jax.tree.map(lambda _: P(), _out_template(state, batch))
         fn = compat.shard_map(per_pod, mesh=mesh,
                               in_specs=(state_specs, batch_specs),
                               out_specs=out_specs, axis_names={"pod"},

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.chaos.hooks import chaos_point
 from repro.obs import (CollapseSentinel, JsonlWriter, RollingWindow,
                        SentinelConfig)
 
@@ -126,6 +127,8 @@ class Trainer:
     def _try_resume(self):
         if not self.cfg.ckpt_dir:
             return
+        # latest_step runs clean_debris: half-written .tmp dirs from a
+        # killed save vanish, an interrupted re-save is rolled forward
         step = ckpt_mod.latest_step(self.cfg.ckpt_dir)
         if step is not None:
             self.state, manifest = ckpt_mod.restore(self.cfg.ckpt_dir,
@@ -232,6 +235,9 @@ class Trainer:
                                      "error": repr(e)})
                 continue
             dt = time.time() - t0
+            # chaos seam: NaN/Inf burst injection on the host-side loss
+            # (exercises the skip-budget path without touching the jit)
+            loss = chaos_point("trainer.loss", loss, step=step)
             data_stats = None
             if self._last_data_stats is not None:
                 data_stats = {f"data/{k}": float(v)

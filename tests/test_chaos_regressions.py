@@ -1,0 +1,356 @@
+"""Regression tests for the bugs the chaos harness exposed (DESIGN.md §15).
+
+Every test here fails on the pre-harness code:
+
+  * checkpoint re-save deleted the live step dir *before* the commit
+    rename -- a kill in that window lost the step entirely,
+  * `restore` raised raw zipfile/json errors on a corrupt checkpoint
+    instead of skipping to an older intact one,
+  * `make_hier_train_step` hard-coded the shard_map metrics out_specs
+    (models emitting extra keys or metrics["obs"] could not run) and
+    reported grad_norm as a mean of per-pod norms instead of the norm of
+    the accumulated gradient,
+  * a corrupt/foreign-version autotune cache crashed kernel launch,
+  * `ShardReader` silently served short documents from truncated .bin
+    files and raw JSONDecodeErrors from corrupt manifests,
+  * `DevicePrefetcher.restart` let a producer stuck past the join
+    timeout push stale batches into the new generation, and a producer
+    death threw away good batches already queued.
+"""
+import os
+import shutil
+import subprocess
+import sys
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.chaos import hooks
+from repro.data.packing import PackedBatch
+from repro.data.prefetch import DevicePrefetcher
+from repro.data.shards import ShardReader, ShardWriter
+from repro.kernels.autotune import AutotuneCache
+from repro.optim import adam as adam_mod
+from repro.train import checkpoint as ck
+from repro.train import train_step as ts
+
+
+def _state(v, n=4):
+    return {"w": np.full((n,), float(v), np.float32), "step": np.int32(5)}
+
+
+# --------------------------------------------------------------------------
+# checkpoint crash windows + corruption
+# --------------------------------------------------------------------------
+
+def test_kill_during_resave_never_loses_the_step(tmp_path, monkeypatch):
+    """Pre-harness `save` rmtree'd the LIVE step dir before renaming the
+    tmp over it; a kill between those syscalls lost the step. The
+    park-old protocol only deletes the parked copy after the commit."""
+    root = str(tmp_path)
+    ck.save(root, 5, _state(1))
+    real_rmtree = shutil.rmtree
+
+    def dying_rmtree(path, *a, **kw):
+        real_rmtree(path, *a, **kw)
+        raise hooks.SimulatedCrash(f"killed right after rmtree({path})")
+
+    monkeypatch.setattr(shutil, "rmtree", dying_rmtree)
+    with pytest.raises(hooks.SimulatedCrash):
+        ck.save(root, 5, _state(2))
+    monkeypatch.setattr(shutil, "rmtree", real_rmtree)
+    assert ck.latest_step(root) == 5
+    state, _ = ck.restore(root, _state(0))
+    assert float(state["w"][0]) == 2.0
+
+
+def test_restore_skips_corrupt_newest_checkpoint(tmp_path):
+    root = str(tmp_path)
+    ck.save(root, 2, {"w": np.ones((4,), np.float32), "step": np.int32(2)})
+    ck.save(root, 4, {"w": np.ones((4,), np.float32), "step": np.int32(4)})
+    npz = os.path.join(root, "step_00000004", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.write(b"\xff" * 256)
+    with pytest.warns(UserWarning):
+        state, _ = ck.restore(
+            root, {"w": np.zeros((4,), np.float32), "step": np.int32(0)})
+    assert int(state["step"]) == 2
+    with pytest.raises(ck.CheckpointError):
+        ck.restore(root, {"w": np.zeros((4,), np.float32),
+                          "step": np.int32(0)}, step=4)
+
+
+def test_restore_raises_checkpoint_error_when_all_corrupt(tmp_path):
+    root = str(tmp_path)
+    ck.save(root, 3, _state(3))
+    with open(os.path.join(root, "step_00000003", "manifest.json"),
+              "w") as f:
+        f.write("{]] not json")
+    with pytest.raises(ck.CheckpointError, match="no restorable"):
+        with pytest.warns(UserWarning):
+            ck.restore(root, _state(0))
+
+
+# --------------------------------------------------------------------------
+# hier train step: eval_shape out_specs + post-accumulation grad_norm
+# --------------------------------------------------------------------------
+
+class _Policy:
+    def __init__(self, obs):
+        self.obs_metrics = obs
+
+
+class _StubModel:
+    """Minimal model.loss contract: grad w.r.t. `w` is mean(batch, 0)."""
+
+    def __init__(self, obs_metrics=False, extra=False):
+        self.policy = _Policy(obs_metrics)
+        self.extra = extra
+
+    def loss(self, params, batch):
+        g = jnp.mean(batch["x"], axis=0)
+        loss = jnp.sum(params["w"] * g)
+        metrics = {"lm_loss": loss, "aux_loss": jnp.float32(0.0)}
+        if self.extra:
+            metrics["extra_stat"] = jnp.float32(1.25)
+        if self.policy.obs_metrics:
+            metrics["obs"] = {"agg/min_snr_db": jnp.float32(12.0)}
+        return loss, metrics
+
+
+def _hier_state(n=4):
+    params = {"w": jnp.ones((n,), jnp.float32)}
+    return {"params": params,
+            "opt": adam_mod.init_state(params, adam_mod.AdamConfig()),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _pod_mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("pod",))
+
+
+def test_hier_step_accepts_model_defined_metric_keys():
+    """Pre-harness out_specs were a hard-coded 4-key dict; a model
+    emitting any extra metric failed shard_map with a tree mismatch."""
+    model = _StubModel(extra=True)
+    step = ts.make_hier_train_step(model, _pod_mesh(), compress=False)
+    state, batch = _hier_state(), {"x": jnp.ones((2, 4), jnp.float32)}
+    _, metrics = step(state, batch)
+    assert float(metrics["extra_stat"]) == 1.25
+    assert {"lm_loss", "aux_loss", "loss", "grad_norm"} <= metrics.keys()
+
+
+def test_hier_step_supports_obs_metrics():
+    """Pre-harness factory raised NotImplementedError under
+    policy.obs_metrics; the eval_shape template carries the obs tree."""
+    model = _StubModel(obs_metrics=True)
+    step = ts.make_hier_train_step(model, _pod_mesh(), compress=False)
+    _, metrics = step(_hier_state(), {"x": jnp.ones((2, 4), jnp.float32)})
+    assert float(metrics["obs"]["agg/min_snr_db"]) == 12.0
+
+
+_HIER_GRADNORM_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, {src!r})
+sys.path.insert(0, {tests!r})
+
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.optim import adam as adam_mod
+from repro.train import train_step as ts
+from test_chaos_regressions import _StubModel
+
+mesh = Mesh(np.array(jax.devices()[:2]), ("pod",))
+params = {{"w": jnp.zeros((4,), jnp.float32)}}
+state = {{"params": params,
+          "opt": adam_mod.init_state(params, adam_mod.AdamConfig()),
+          "step": jnp.zeros((), jnp.int32)}}
+# pod 0 sees +1 rows, pod 1 sees -1 rows: per-pod grads are +-ones(4)
+# (norm 2 each) but the accumulated (pod-mean) gradient is exactly zero.
+x = jnp.concatenate([jnp.ones((1, 4)), -jnp.ones((1, 4))]).astype(
+    jnp.float32)
+step = ts.make_hier_train_step(_StubModel(), mesh, compress=False,
+                               clip_norm=1.0)
+_, metrics = step(state, {{"x": x}})
+gn = float(metrics["grad_norm"])
+assert gn < 1e-5, (
+    "grad_norm %.4f is a mean of per-pod norms, not the norm of the "
+    "accumulated gradient" % gn)
+print("HIER_GRADNORM_OK")
+"""
+
+
+@pytest.mark.slow
+def test_hier_grad_norm_is_post_allreduce_2_fake_devices():
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.abspath(os.path.join(here, os.pardir, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _HIER_GRADNORM_CHILD.format(src=src, tests=here)],
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, \
+        f"child failed:\nstdout:\n{proc.stdout[-2000:]}\n" \
+        f"stderr:\n{proc.stderr[-2000:]}"
+    assert "HIER_GRADNORM_OK" in proc.stdout
+
+
+def test_microbatch_grad_norm_is_post_accumulation():
+    """Guard: with microbatch accumulation, the clip decision and the
+    reported grad_norm are taken on the ACCUMULATED gradient."""
+    model = _StubModel()
+    step = ts.make_train_step(model, _pod_mesh(), microbatch=2,
+                              clip_norm=1e9)
+    # microbatch 0 rows are all 3s (grad 3*ones, norm 6); microbatch 1
+    # rows are all -1s (grad -ones, norm 2).  Accumulated grad = ones,
+    # norm 2.  A mean-of-norms bug would report 4.
+    x = jnp.concatenate([jnp.full((2, 4), 3.0), jnp.full((2, 4), -1.0)])
+    _, metrics = step(_hier_state(), {"x": x.astype(jnp.float32)})
+    assert abs(float(metrics["grad_norm"]) - 2.0) < 0.05
+
+
+# --------------------------------------------------------------------------
+# autotune cache corruption
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("payload", [
+    b"{]] not json",
+    b"[1, 2, 3]",
+    b'{"version": 999, "entries": {"x": [64, 64, 64]}}',
+    b'{"version": 1, "entries": "not a dict"}',
+], ids=["garbage", "json-list", "foreign-version", "entries-not-dict"])
+def test_autotune_corrupt_cache_falls_back_with_warning(tmp_path, payload):
+    path = tmp_path / "cache.json"
+    path.write_bytes(payload)
+    cache = AutotuneCache(str(path))
+    with pytest.warns(UserWarning, match="empty autotune cache"):
+        assert cache.get("q4gemm", "cpu", 128, 128, 128) is None
+    cache.put("q4gemm", "cpu", 128, 128, 128, (32, 32, 32))
+    assert tuple(AutotuneCache(str(path)).get(
+        "q4gemm", "cpu", 128, 128, 128)) == (32, 32, 32)
+
+
+# --------------------------------------------------------------------------
+# shard reader validation
+# --------------------------------------------------------------------------
+
+def _tiny_corpus(root, n_docs=8):
+    w = ShardWriter(str(root), vocab_size=97, shard_tokens=1 << 20)
+    rng = np.random.default_rng(0)
+    for _ in range(n_docs):
+        w.add_document(rng.integers(1, 97, size=16))
+    return w.finalize()
+
+
+def test_truncated_shard_bin_rejected(tmp_path):
+    """memmap slices past EOF clip silently: without the size check a
+    truncated .bin served short/empty documents as if nothing happened."""
+    manifest = _tiny_corpus(tmp_path)
+    r = ShardReader(manifest)
+    bin_path = os.path.join(r.root, r.shards[0]["file"])
+    with open(bin_path, "r+b") as f:
+        f.truncate(os.path.getsize(bin_path) // 2)
+    with pytest.raises(ValueError, match="truncated or corrupt"):
+        ShardReader(manifest).doc(0)
+
+
+def test_corrupt_shard_manifest_clean_error(tmp_path):
+    manifest = _tiny_corpus(tmp_path)
+    with open(manifest, "w") as f:
+        f.write("{]] not json")
+    with pytest.raises(ValueError, match="corrupt shard manifest"):
+        ShardReader(manifest)
+
+
+def test_shard_manifest_missing_keys_rejected(tmp_path):
+    manifest = _tiny_corpus(tmp_path)
+    with open(manifest, "w") as f:
+        f.write('{"format": "repro-shards-v1", "dtype": "uint16"}')
+    with pytest.raises(ValueError, match="missing keys"):
+        ShardReader(manifest)
+
+
+# --------------------------------------------------------------------------
+# prefetch generation fence + residual drain
+# --------------------------------------------------------------------------
+
+class _GatedStream:
+    """Cursor advances before the gated (slow) part of the draw, so a
+    reseek is never clobbered -- the generation fence is what's tested."""
+
+    def __init__(self):
+        self.i = 0
+        self.gate = threading.Event()
+        self.gate.set()
+
+    def next_batch(self):
+        i = self.i
+        self.i = i + 1
+        self.gate.wait(20.0)
+        return PackedBatch({"tokens": np.full((1, 4), i, np.int32)},
+                           {"pack_frac": 1.0})
+
+    def state_dict(self):
+        return {"i": self.i}
+
+    def load_state_dict(self, s):
+        self.i = int(s["i"])
+
+
+def test_prefetch_restart_fences_stale_producer():
+    """Pre-fence restart reused the shared queue/stop event: a producer
+    stuck past the join timeout resumed and pushed a stale batch into
+    the post-restart stream."""
+    stream = _GatedStream()
+    pf = DevicePrefetcher(stream, depth=1, stall_timeout=0.4,
+                          join_timeout=0.2)
+    assert int(pf.next_batch().arrays["tokens"][0, 0]) == 0
+    stream.gate.clear()                    # wedge the producer mid-draw
+    with pytest.raises(TimeoutError):
+        for _ in range(10):                # drain read-ahead, then stall
+            pf.next_batch()
+    pf.restart({"i": 100})                 # old producer still wedged
+    stream.gate.set()                      # release the zombie
+    got = [int(pf.next_batch().arrays["tokens"][0, 0]) for _ in range(3)]
+    assert got == [100, 101, 102], got
+    pf.stop()
+
+
+def test_prefetch_drains_residual_batches_before_surfacing_death():
+    """Batches the producer queued before dying are still valid (and
+    checkpoint-consistent); the death must surface only once the queue
+    is dry -- previously a good staged batch was thrown away."""
+
+    class DyingStream:
+        def __init__(self):
+            self.i = 0
+
+        def next_batch(self):
+            if self.i >= 2:
+                raise OSError("disk vanished")
+            i = self.i
+            self.i += 1
+            return PackedBatch({"tokens": np.full((1, 4), i, np.int32)},
+                               {"pack_frac": 1.0})
+
+        def state_dict(self):
+            return {"i": self.i}
+
+        def load_state_dict(self, s):
+            self.i = int(s["i"])
+
+    pf = DevicePrefetcher(DyingStream(), depth=1, stall_timeout=2.0)
+    served = []
+    with pytest.raises(RuntimeError, match="producer died") as ei:
+        for _ in range(5):
+            served.append(int(pf.next_batch().arrays["tokens"][0, 0]))
+    assert served == [0, 1]
+    assert isinstance(ei.value.__cause__, OSError)
+    pf.stop()

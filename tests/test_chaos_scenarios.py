@@ -1,0 +1,129 @@
+"""Chaos harness tests: seam mechanics, scenario runner, CLI, env-kill.
+
+The fast scenario set (12 seeded fault scenarios, pure host numpy) runs
+in-process here, so tier-1 exercises the same invariants CI's chaos job
+does: kill-mid-checkpoint resume token-identity, debris cleanup,
+sentinel trip -> bf16 fallback, corruption rejection, prefetch fencing.
+The subprocess/serve set rides the `slow` marker.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.chaos import hooks, scenarios
+from repro.chaos.__main__ import main as chaos_main
+
+
+# --------------------------------------------------------------------------
+# seam mechanics
+# --------------------------------------------------------------------------
+
+def test_chaos_point_identity_when_disarmed():
+    hooks.clear()
+    assert hooks.chaos_point("no.such.point", 42, step=7) == 42
+    assert hooks.chaos_point("no.such.point") is None
+
+
+def test_installed_scopes_handler_even_on_crash():
+    with hooks.installed("t.point", lambda v, **k: v + 1):
+        assert hooks.chaos_point("t.point", 1) == 2
+    assert hooks.chaos_point("t.point", 1) == 1
+    with pytest.raises(hooks.SimulatedCrash):
+        with hooks.installed("t.point", hooks.crash_handler()):
+            hooks.chaos_point("t.point")
+    assert hooks.chaos_point("t.point", 3) == 3   # uninstalled despite crash
+
+
+def test_crash_handler_fires_on_nth_hit():
+    h = hooks.crash_handler(nth=3)
+    with hooks.installed("t.nth", h):
+        hooks.chaos_point("t.nth")
+        hooks.chaos_point("t.nth")
+        with pytest.raises(hooks.SimulatedCrash):
+            hooks.chaos_point("t.nth")
+
+
+def test_handlers_chain_in_install_order():
+    with hooks.installed("t.chain", lambda v, **k: v + "a"):
+        with hooks.installed("t.chain", lambda v, **k: v + "b"):
+            assert hooks.chaos_point("t.chain", "x") == "xab"
+
+
+# --------------------------------------------------------------------------
+# scenario registry + runner
+# --------------------------------------------------------------------------
+
+def test_names_selectors():
+    fast = scenarios.names("fast")
+    assert "kill_mid_checkpoint_resume" in fast
+    assert len(fast) >= 6                       # acceptance floor
+    assert set(fast) <= set(scenarios.names("full"))
+    assert scenarios.names("ckpt,serve")        # tag mix resolves
+    with pytest.raises(ValueError, match="unknown"):
+        scenarios.names("no_such_tag")
+
+
+def test_fast_scenarios_green_and_journal(tmp_path):
+    journal = str(tmp_path / "journal.jsonl")
+    res = scenarios.run_scenarios("fast", seed=0, journal=journal,
+                                  echo=lambda s: None)
+    assert len(res) >= 6
+    bad = {r.name: [c.name for c in r.checks if not c.ok] + [r.error]
+           for r in res if not r.ok}
+    assert not bad, bad
+    lines = [json.loads(ln) for ln in open(journal)]
+    assert lines[-1]["summary"] is True
+    assert lines[-1]["n_passed"] == len(res)
+    assert {ln["scenario"] for ln in lines[:-1]} == {r.name for r in res}
+    assert all(ln["checks"] for ln in lines[:-1])
+
+
+def test_runner_reports_scenario_failure(tmp_path):
+    @scenarios.scenario("_selftest")
+    def failing_scenario(ctx):
+        ctx.check("doomed", False, "by design")
+    try:
+        res = scenarios.run_scenarios("_selftest", seed=0,
+                                      echo=lambda s: None)
+        assert len(res) == 1 and not res[0].ok
+        assert res[0].checks[0].detail == "by design"
+    finally:
+        del scenarios._REGISTRY["failing_scenario"]
+
+
+def test_cli_list_and_exit_codes(capsys):
+    assert chaos_main(["--scenarios", "fast", "--list"]) == 0
+    out = capsys.readouterr().out
+    assert "kill_mid_checkpoint_resume" in out
+
+
+# --------------------------------------------------------------------------
+# slow tier: subprocess hard-kill + real-model serve faults
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_env_kill_hard_exits_child():
+    """REPRO_CHAOS_KILL arms an os._exit at the nth chaos-point hit --
+    the SIGKILL stand-in for subprocess scenarios."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                       os.pardir, "src"))
+    child = ("from repro.chaos.hooks import chaos_point\n"
+             "chaos_point('p.x'); chaos_point('p.x'); print('alive')\n")
+    env = dict(os.environ, PYTHONPATH=src, **hooks.kill_env("p.x", nth=2))
+    p = subprocess.run([sys.executable, "-c", child], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert p.returncode == hooks.KILL_EXIT_CODE, (p.returncode, p.stderr)
+    assert "alive" not in p.stdout
+
+
+@pytest.mark.slow
+def test_full_scenarios_green():
+    res = scenarios.run_scenarios("subprocess,serve", seed=0,
+                                  echo=lambda s: None)
+    assert len(res) == 2
+    bad = {r.name: [c.name for c in r.checks if not c.ok] + [r.error]
+           for r in res if not r.ok}
+    assert not bad, bad
